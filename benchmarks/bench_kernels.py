@@ -1,0 +1,62 @@
+"""Kernel-layer microbenchmarks: the OCS client-norm reduction and the
+attention hot-spot.  On this CPU container, wall-clock numbers come from the
+portable XLA implementations (the Pallas kernels run in interpret mode for
+correctness only); FLOP counts are derived analytically."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core import ocs
+from repro.kernels import ops, ref
+from repro.models.layers import chunked_attention
+
+
+def _time(fn, *args, reps=10):
+    fn(*args)
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # client norms over a 32-client x 4M-param update matrix
+    upd = jax.random.normal(key, (32, 1 << 22), jnp.float32)
+    w = jnp.full((32,), 1 / 32)
+    t_jnp = _time(jax.jit(lambda u: ocs.client_norms({"u": u}, w)), upd, reps=5)
+    csv_line("client_norms_xla_32x4M", t_jnp, f"bytes={upd.size*4}")
+    t_int = _time(
+        lambda u: ops.client_sqnorms(u[:, : 1 << 14], chunk=4096, interpret=True), upd,
+        reps=2,
+    )
+    csv_line("client_sqnorms_pallas_interp_32x16K", t_int, "correctness-mode")
+
+    # attention: dense vs chunked (flash-style) at 4k, f32
+    b, s, h, hd = 1, 4096, 8, 128
+    q, k, v = [
+        jax.random.normal(jax.random.fold_in(key, i), (b, s, h, hd)) for i in range(3)
+    ]
+    flops = 4.0 * b * h * s * s * hd  # qk + pv
+    t_chunk = _time(
+        jax.jit(lambda a, b_, c: chunked_attention(a, b_, c, window=None)), q, k, v,
+        reps=3,
+    )
+    csv_line("attention_chunked_4k", t_chunk, f"gflops={flops/1e9:.1f}")
+    t_win = _time(
+        jax.jit(lambda a, b_, c: chunked_attention(a, b_, c, window=1024)), q, k, v,
+        reps=3,
+    )
+    csv_line("attention_chunked_4k_swa1024", t_win, f"gflops={flops/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

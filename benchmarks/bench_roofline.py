@@ -1,0 +1,85 @@
+"""Aggregate the dry-run artifacts into the §Roofline table (per arch x shape
+x mesh: three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_line
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load(mesh="pod1", tag=None):
+    """tag=None -> baseline artifacts only (arch__shape.json); tag='__x' ->
+    that perf-variant's artifacts."""
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, "dryrun", mesh, "*.json"))):
+        stem = os.path.basename(f)[: -len(".json")]
+        n_sep = stem.count("__")
+        if tag is None and n_sep != 1:
+            continue
+        if tag is not None and not stem.endswith(tag):
+            continue
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1), ("ms", 1e-3), ("us", 1e-6), ("ns", 1e-9)):
+        if x >= scale:
+            return f"{x/scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def markdown_table(rows):
+    lines = [
+        "| arch | shape | mesh | compute(HLO) | compute(6ND floor) | memory | "
+        "collective | bottleneck | useful/HLO | notes |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — | — | "
+                f"{r['skipped']} |"
+            )
+            continue
+        cm = r.get("compute_model_s", r["model_flops"] / (r["chips"] * 197e12))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(cm)} | {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | {r['notes']} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    for mesh in ("pod1", "pod2"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        md = markdown_table(rows)
+        out = os.path.join(ART, f"roofline_{mesh}.md")
+        with open(out, "w") as f:
+            f.write(md + "\n")
+        n_ok = sum(1 for r in rows if "skipped" not in r)
+        worst = min(
+            (r for r in rows if "skipped" not in r),
+            key=lambda r: r["useful_flops_ratio"],
+        )
+        csv_line(
+            f"roofline_{mesh}", 0.0,
+            f"pairs={len(rows)};compiled={n_ok};"
+            f"worst_useful_ratio={worst['useful_flops_ratio']:.3f}@"
+            f"{worst['arch']}/{worst['shape']}",
+        )
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Figures 6-7: Shakespeare(-like) next-char prediction with the
+paper's 2-layer GRU, n in {32, 128} clients drawn from the 715-client pool,
+m in {2, 6} (n=32) / {12} (n=128)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, run_method
+from repro.data import charlm
+from repro.models.simple import gru_lm
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def run(rounds=80, pool=240, hidden=128):
+    os.makedirs(ART, exist_ok=True)
+    ds = charlm(n_clients=pool, seed=3)
+    # held-out eval: last client batch pooled
+    rng = np.random.default_rng(42)
+    evb = ds.sample_round_batches(rng, list(range(8)), 4, 32)
+    ev = {
+        "tokens": jnp.asarray(evb["tokens"].reshape(-1, 5))[:512],
+        "targets": jnp.asarray(evb["targets"].reshape(-1, 5))[:512],
+    }
+    init, loss, acc = gru_lm(ds.num_classes, hidden=hidden, layers=2)
+    results = {}
+    grid = [
+        ("n32_full", dict(sampler="full", m=32, lr=1.0), 32),
+        ("n32_ocs_m2", dict(sampler="aocs", m=2, lr=1.0), 32),
+        ("n32_ocs_m6", dict(sampler="aocs", m=6, lr=1.0), 32),
+        ("n32_uniform_m2", dict(sampler="uniform", m=2, lr=0.5), 32),
+        ("n128_full", dict(sampler="full", m=128, lr=1.0), 128),
+        ("n128_ocs_m12", dict(sampler="aocs", m=12, lr=1.0), 128),
+        ("n128_uniform_m12", dict(sampler="uniform", m=12, lr=0.5), 128),
+    ]
+    for name, kw, n in grid:
+        t0 = time.time()
+        h = run_method(ds, ev, init, loss, acc, rounds=rounds, n=n,
+                       local_steps=6, batch_size=8, **kw)
+        accs = [a for _, a in h.acc]
+        results[name] = {
+            "final_acc": accs[-1], "final_loss": h.loss[-1],
+            "alpha_mean": float(np.mean(h.alpha[5:])), "total_bits": h.bits[-1],
+            "acc_curve": h.acc, "bits_curve": h.bits[::5],
+        }
+        us = (time.time() - t0) / rounds * 1e6
+        csv_line(f"shakespeare_{name}", us,
+                 f"acc={accs[-1]:.3f};loss={h.loss[-1]:.3f};bits={h.bits[-1]/1e6:.0f}M")
+    with open(os.path.join(ART, "shakespeare.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    run()

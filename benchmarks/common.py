@@ -1,0 +1,38 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.fl.trainer import run_training
+
+
+def bits_to_target(hist, target_acc):
+    """First cumulative-bits value at which eval accuracy >= target."""
+    for (k, a) in hist.acc:
+        if a >= target_acc:
+            return hist.bits[min(k, len(hist.bits) - 1)]
+    return None
+
+
+def run_method(ds, ev, init, loss, acc, *, sampler, m, lr, rounds, n=32,
+               local_steps=8, batch_size=20, seed=1, eval_every=5):
+    fl = FLConfig(n_clients=n, expected_clients=m, sampler=sampler,
+                  local_steps=local_steps, lr_local=lr)
+    t0 = time.time()
+    params, hist = run_training(
+        ds, init, loss, fl, rounds=rounds, batch_size=batch_size,
+        eval_fn=jax.jit(acc) if acc else None, eval_batch=ev,
+        eval_every=eval_every, seed=seed,
+    )
+    hist.wall_s = time.time() - t0
+    return hist
+
+
+def csv_line(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

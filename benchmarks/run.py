@@ -1,0 +1,72 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmark results are also
+written as JSON under benchmarks/artifacts/).
+
+  PYTHONPATH=src python -m benchmarks.run            # fast suite
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale rounds
+  PYTHONPATH=src python -m benchmarks.run --only femnist,kernels
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_cifar,
+        bench_compression,
+        bench_femnist,
+        bench_kernels,
+        bench_roofline,
+        bench_shakespeare,
+        bench_stepsize,
+        bench_variance,
+    )
+
+    suites = {
+        # paper Figures 3-5 (FEMNIST datasets 1-3, acc/loss vs rounds & bits)
+        "femnist": lambda: bench_femnist.run(rounds=150 if args.full else 50),
+        # paper Figures 6-7 (Shakespeare, n in {32,128})
+        "shakespeare": lambda: bench_shakespeare.run(rounds=300 if args.full else 80),
+        # paper Appendix G (balanced CIFAR100-like)
+        "cifar": lambda: bench_cifar.run(rounds=100 if args.full else 30),
+        # paper Sec 5.2/5.4 step-size robustness claim
+        "stepsize": lambda: bench_stepsize.run(rounds=60 if args.full else 20),
+        # Definitions 11/12 (alpha/gamma) + Alg1-vs-Alg2 agreement table
+        "variance": lambda: bench_variance.run(),
+        # beyond-paper: OCS x unbiased compression (paper Sec. 6 future work)
+        "compression": lambda: bench_compression.run(rounds=80 if args.full else 30),
+        # kernel hot-spots
+        "kernels": lambda: bench_kernels.run(),
+        # deliverable (g): roofline table from dry-run artifacts
+        "roofline": lambda: bench_roofline.run(),
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# suite {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

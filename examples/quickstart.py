@@ -1,0 +1,44 @@
+"""Quickstart: optimal client sampling in ~40 lines.
+
+Eight clients hold heterogeneous quadratic objectives; each round every
+client computes its gradient, but only m=3 (in expectation) transmit —
+chosen by the paper's optimal formula from update norms alone.  Compare the
+distance-to-optimum against uniform sampling at the same budget.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sample_and_aggregate
+from repro.data import quadratics
+
+import numpy as np
+
+n, dim, m, rounds = 8, 12, 3, 400
+a, c, x_star = map(jnp.asarray, quadratics(n_clients=n, dim=dim, hetero=2.0, seed=0))
+# heterogeneous client scales: a few clients' updates matter much more
+scale = jnp.asarray([0.05, 0.05, 0.1, 0.1, 0.2, 0.5, 1.0, 6.0])
+a = a * scale[:, None, None]
+x_star = jnp.asarray(np.linalg.solve(
+    np.asarray(a).sum(0), np.einsum("nij,nj->i", np.asarray(a), np.asarray(c))))
+w = jnp.full((n,), 1.0 / n)
+key = jax.random.PRNGKey(0)
+
+
+def run(sampler: str) -> float:
+    x = jnp.zeros(dim)
+    for k in range(rounds):
+        grads = jnp.einsum("nij,nj->ni", a, x[None, :] - c)    # each client's U_i
+        res = sample_and_aggregate(
+            {"g": grads}, w, m, jax.random.fold_in(key, k), sampler=sampler
+        )
+        x = x - 0.5 / (1 + 0.02 * k) * res.aggregate["g"]       # master step
+    return float(jnp.linalg.norm(x - x_star))
+
+
+for sampler in ("full", "optimal", "aocs", "uniform"):
+    err = run(sampler)
+    sent = n if sampler == "full" else m
+    print(f"{sampler:8s}  ~{sent} clients/round  ||x - x*|| = {err:.4f}")

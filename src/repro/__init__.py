@@ -1,0 +1,6 @@
+"""repro: Optimal Client Sampling for Federated Learning (Chen, Horvath,
+Richtarik) as a production multi-pod JAX training/serving framework.
+
+Subpackages: core (the paper), fl (federated runtime), models (10 assigned
+architectures), data, optim, checkpoint, kernels (Pallas TPU), configs,
+launch (mesh / dry-run / drivers)."""

@@ -1,0 +1,42 @@
+"""Checkpointing: params/opt-state pytrees -> .npz + JSON treedef index.
+
+Leaves are saved flattened with their tree paths as keys, so any pure-dict
+pytree round-trips exactly (shapes, dtypes, nesting)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = [jax.tree_util.keystr(path) for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save(path: str, tree, step: int = 0):
+    os.makedirs(path, exist_ok=True)
+    keys, leaves, _ = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(leaves)}
+    np.savez(os.path.join(path, "leaves.npz"), **arrays)
+    with open(os.path.join(path, "index.json"), "w") as f:
+        json.dump({"step": step, "keys": keys}, f)
+
+
+def restore(path: str, like_tree):
+    with open(os.path.join(path, "index.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    keys, leaves, _ = _flatten(like_tree)
+    assert keys == meta["keys"], "checkpoint/tree structure mismatch"
+    new_leaves = [
+        data[f"a{i}"].astype(np.asarray(l).dtype) for i, l in enumerate(leaves)
+    ]
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like_tree), new_leaves
+    )
+    return tree, meta["step"]

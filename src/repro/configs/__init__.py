@@ -1,0 +1,5 @@
+"""Assigned architectures (10) and input shapes (4)."""
+
+from repro.configs.base import FLConfig, InputShape, ModelConfig  # noqa: F401
+from repro.configs.registry import ARCHS, get  # noqa: F401
+from repro.configs.shapes import SHAPES  # noqa: F401

@@ -1,0 +1,5 @@
+"""Assigned architecture config (see registry for the literal spec)."""
+
+from repro.configs.registry import LLAMA3_8B as CONFIG  # noqa: F401
+
+CONFIG_REDUCED = CONFIG.reduced()

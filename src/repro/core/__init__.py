@@ -1,0 +1,17 @@
+"""Paper core: optimal client sampling (OCS/AOCS), improvement factors, bits.
+
+Public API:
+  sampling.optimal_probabilities  — exact Eq. (7)
+  sampling.aocs_probabilities     — Algorithm 2 (secure-aggregation friendly)
+  ocs.sample_and_aggregate        — one round of sampling + unbiased aggregation
+  improvement.improvement_factors — alpha^k, gamma^k (Defs. 11/12)
+  bits.BitsLedger                 — client->master uplink accounting
+"""
+
+from repro.core import bits, improvement, ocs, sampling  # noqa: F401
+from repro.core.ocs import OCSResult, sample_and_aggregate  # noqa: F401
+from repro.core.sampling import (  # noqa: F401
+    SAMPLERS,
+    aocs_probabilities,
+    optimal_probabilities,
+)

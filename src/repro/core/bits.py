@@ -1,0 +1,57 @@
+"""Client->master uplink accounting (the paper's x-axis metric).
+
+The paper plots accuracy/loss against *bits communicated from clients to the
+master* and includes Algorithm 2's overhead (Remark 3: O(j_max) extra floats
+per client).  Master->client broadcast is excluded, exactly as in the paper
+(footnote 5).  We count:
+
+  full participation : n   * d * bits_per_param
+  uniform sampling   : |S| * d * bits_per_param            (|S| ~ Binomial)
+  OCS (Alg. 1)       : |S| * d * bits + n * f              (norm upload)
+  AOCS (Alg. 2)      : |S| * d * bits + n * f * (1 + 2*j_used)
+
+with f = 32 (one float) by default.  ``realized`` uses the drawn mask;
+``expected`` uses sum(p).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+FLOAT_BITS = 32
+
+
+@dataclass(frozen=True)
+class BitsLedger:
+    model_dim: int                 # d, number of communicated parameters
+    bits_per_param: int = FLOAT_BITS
+
+    def update_bits(self) -> int:
+        return self.model_dim * self.bits_per_param
+
+    def round_bits(self, mask, sampler: str, n: int, j_used: int = 4,
+                   compression: str = "none", compression_param: float = 0.0):
+        """Uplink bits for one communication round given the realized mask."""
+        import numpy as np
+
+        from repro.core.compression import compressed_bits_per_update
+
+        per_update = (
+            self.update_bits()
+            if compression == "none"
+            else compressed_bits_per_update(self.model_dim, compression, compression_param)
+        )
+        sent = int(np.sum(np.asarray(mask))) * per_update
+        if sampler == "full":
+            overhead = 0
+        elif sampler == "uniform":
+            overhead = 0
+        elif sampler == "optimal":
+            overhead = n * FLOAT_BITS
+        elif sampler == "aocs":
+            overhead = n * FLOAT_BITS * (1 + 2 * j_used)
+        else:
+            raise ValueError(f"unknown sampler {sampler!r}")
+        return sent + overhead

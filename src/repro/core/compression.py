@@ -1,0 +1,71 @@
+"""Unbiased communication-compression operators, composable with OCS.
+
+The paper's first listed future-work item is combining optimal client
+sampling with update compression ("orthogonal and compatible", Sec. 1.2 /
+Sec. 6).  We implement the two standard unbiased operator families and plug
+them into the round: each sampled client transmits ``C(U_i)`` instead of
+``U_i``; since ``E[C(U)] = U`` the aggregate stays unbiased, and the OCS
+probabilities are computed from the norms of the *compressed* updates (what
+is actually sent — still one float per client).
+
+* ``rand_k``  — random-k sparsification: keep k coordinates uniformly,
+  scale by d/k.  Uplink cost ~ k * (value + index) bits.
+* ``qsgd``    — QSGD stochastic quantization (Alistarh et al. 2017) with s
+  levels: transmit per-leaf norm + signs + integer levels
+  (~ d * (log2(s+1) + 1) bits + one float).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def rand_k_leaf(x: jax.Array, frac: float, key: jax.Array) -> jax.Array:
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    k = max(1, int(d * frac))
+    mask = jax.random.permutation(key, d) < k
+    return (jnp.where(mask, flat, 0.0) * (d / k)).reshape(x.shape).astype(x.dtype)
+
+
+def qsgd_leaf(x: jax.Array, levels: int, key: jax.Array) -> jax.Array:
+    flat = x.reshape(-1).astype(jnp.float32)
+    norm = jnp.linalg.norm(flat)
+    scaled = jnp.where(norm > 0, jnp.abs(flat) / jnp.maximum(norm, 1e-30) * levels, 0.0)
+    low = jnp.floor(scaled)
+    prob = scaled - low
+    q = low + (jax.random.uniform(key, flat.shape) < prob)
+    out = jnp.sign(flat) * q * norm / levels
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def compress_update(update: Any, key: jax.Array, kind: str, param: float) -> Any:
+    """Apply an unbiased compressor leaf-wise to one client's update tree."""
+    if kind in (None, "none"):
+        return update
+    leaves, treedef = jax.tree_util.tree_flatten(update)
+    keys = jax.random.split(key, len(leaves))
+    if kind == "randk":
+        out = [rand_k_leaf(l, param, k) for l, k in zip(leaves, keys)]
+    elif kind == "qsgd":
+        out = [qsgd_leaf(l, int(param), k) for l, k in zip(leaves, keys)]
+    else:
+        raise ValueError(f"unknown compressor {kind!r}")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def compressed_bits_per_update(dim: int, kind: str, param: float) -> int:
+    """Uplink bits for one transmitted (compressed) update of `dim` params."""
+    if kind in (None, "none"):
+        return dim * 32
+    if kind == "randk":
+        k = max(1, int(dim * param))
+        return k * (32 + max(1, math.ceil(math.log2(max(dim, 2)))))
+    if kind == "qsgd":
+        s = int(param)
+        return dim * (math.ceil(math.log2(s + 1)) + 1) + 32
+    raise ValueError(kind)

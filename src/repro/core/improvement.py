@@ -1,0 +1,41 @@
+"""Improvement factors alpha^k and gamma^k (paper Definitions 11 & 12).
+
+For *independent* sampling, inequality (5) holds with equality, so the
+sampling variance has the closed form (Eq. 6 / Eq. 31):
+
+    Var(p) = sum_i (1 - p_i)/p_i * u_i^2 ,   u_i = ||w_i U_i||.
+
+alpha^k = Var(p_opt) / Var(p_unif) in [0, 1];  gamma^k = m/(alpha(n-m)+m).
+These are the exact quantities the convergence theorems interpolate with, and
+every benchmark logs them per round.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+
+_EPS = 1e-12
+
+
+def sampling_variance(u: jax.Array, p: jax.Array) -> jax.Array:
+    """Closed-form variance of the unbiased aggregate under independent
+    sampling with inclusion probabilities p (Eq. 6)."""
+    u = u.astype(jnp.float32)
+    active = (p > _EPS) & (u > _EPS)
+    terms = jnp.where(active, (1.0 - p) / jnp.maximum(p, _EPS) * u * u, 0.0)
+    return jnp.sum(terms)
+
+
+def improvement_factors(u: jax.Array, m: int) -> tuple[jax.Array, jax.Array]:
+    """Return (alpha^k, gamma^k) for norm vector u and expected batch m."""
+    n = u.shape[0]
+    p_opt = sampling.optimal_probabilities(u, m)
+    var_opt = sampling_variance(u, p_opt)
+    var_unif = (n - m) / m * jnp.sum(jnp.square(u.astype(jnp.float32)))
+    alpha = jnp.where(var_unif > _EPS, var_opt / jnp.maximum(var_unif, _EPS), 0.0)
+    alpha = jnp.clip(alpha, 0.0, 1.0)
+    gamma = m / (alpha * (n - m) + m)
+    return alpha, gamma

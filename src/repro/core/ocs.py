@@ -1,0 +1,113 @@
+"""The OCS aggregation layer: norms -> probabilities -> Bernoulli masks ->
+unbiased weighted aggregate (paper Eq. 2 with Algorithm 1/2 probabilities).
+
+This is the composable module the FL runtime calls once per round.  All inputs
+carry a leading client axis ``n``; under pjit/GSPMD that axis is sharded over
+the ``('pod','data')`` mesh axes so the client-sum below lowers to the
+cross-client all-reduce that models client->master communication.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.improvement import improvement_factors
+
+_EPS = 1e-12
+
+
+class OCSResult(NamedTuple):
+    aggregate: Any          # pytree, same structure as one client's update
+    probs: jax.Array        # (n,) inclusion probabilities
+    mask: jax.Array         # (n,) realized Bernoulli participation
+    norms: jax.Array        # (n,) weighted update norms ||w_i U_i||
+    alpha: jax.Array        # improvement factor (Def. 11)
+    gamma: jax.Array        # relative improvement factor (Def. 12)
+    expected_clients: jax.Array  # sum(p) <= m
+
+
+def client_norms(updates: Any, weights: jax.Array) -> jax.Array:
+    """``u_i = ||w_i U_i||`` per client; updates leaves have leading axis n.
+
+    Implementation note: reduce over ``axes 1..ndim`` directly rather than
+    ``reshape(n, -1)`` — reshaping a sharded leaf merges the model-sharded
+    dim and forces GSPMD to rematerialise (all-gather) the full per-client
+    update (measured: 3 x 2 TB gathers on the 777B MoE), whereas an axis
+    reduction keeps the sharding and lowers to a partial local reduce + a
+    tiny (n,) all-reduce.  See EXPERIMENTS.md §Perf.
+    """
+    leaves = jax.tree_util.tree_leaves(updates)
+    n = leaves[0].shape[0]
+    sq = jnp.zeros((n,), dtype=jnp.float32)
+    for leaf in leaves:
+        x = leaf.astype(jnp.float32)
+        sq = sq + jnp.sum(x * x, axis=tuple(range(1, x.ndim)))
+    return weights.astype(jnp.float32) * jnp.sqrt(sq)
+
+
+def sample_and_aggregate(
+    updates: Any,
+    weights: jax.Array,
+    m: int,
+    key: jax.Array,
+    sampler: str | Callable = "aocs",
+    j_max: int = 4,
+    norms: jax.Array | None = None,
+    availability: float = 1.0,
+) -> OCSResult:
+    """One round of optimal client sampling.
+
+    Args:
+      updates: pytree of per-client updates, every leaf shaped ``(n, ...)``.
+      weights: ``(n,)`` client weights ``w_i`` (sum to 1).
+      m: expected number of communicating clients.
+      key: PRNG key for the independent Bernoulli participation draws.
+      sampler: 'optimal' | 'aocs' | 'uniform' | 'full' or a callable.
+      norms: optionally precomputed ``||w_i U_i||`` (e.g. from the Pallas
+        fused-norm kernel); computed here otherwise.
+
+    Returns an :class:`OCSResult` whose ``aggregate`` is the unbiased estimator
+    ``sum_i mask_i * (w_i / p_i) * U_i`` of the full update ``sum_i w_i U_i``.
+    """
+    fn = sampling.SAMPLERS[sampler] if isinstance(sampler, str) else sampler
+    u = client_norms(updates, weights) if norms is None else norms
+    n = u.shape[0]
+    # paper Appendix E: partial availability — clients are available with
+    # probability q; sampling acts on the available set and the estimator
+    # rescales by 1/q to stay unbiased over the availability distribution.
+    if availability < 1.0:
+        k_avail, key = jax.random.split(key)
+        avail = jax.random.bernoulli(k_avail, availability, shape=(n,))
+        u = jnp.where(avail, u, 0.0)  # unavailable clients are never sampled
+    else:
+        avail = jnp.ones((n,), bool)
+    if fn is sampling.aocs_probabilities:
+        p = fn(u, m, j_max)
+    else:
+        p = fn(u, m)
+    mask = jax.random.bernoulli(key, jnp.clip(p, 0.0, 1.0), shape=(n,)) & avail
+    scale = jnp.where(
+        mask & (p > _EPS),
+        weights.astype(jnp.float32) / jnp.maximum(p * availability, _EPS),
+        0.0,
+    )
+
+    def agg(leaf):
+        s = scale.reshape((n,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * s, axis=0)
+
+    aggregate = jax.tree_util.tree_map(agg, updates)
+    alpha, gamma = improvement_factors(u, m)
+    return OCSResult(
+        aggregate=aggregate,
+        probs=p,
+        mask=mask,
+        norms=u,
+        alpha=alpha,
+        gamma=gamma,
+        expected_clients=jnp.sum(p),
+    )

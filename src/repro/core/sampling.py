@@ -1,0 +1,112 @@
+"""Optimal client sampling probabilities (paper Sec. 2, Eq. 7) and the
+aggregation-only approximation AOCS (Algorithm 2).
+
+Both functions are pure, jit-able maps from the vector of weighted update norms
+``u_i = ||w_i U_i||`` (shape ``(n,)``) to inclusion probabilities ``p`` with
+``sum(p) <= m`` (up to float error).  They are the mathematical heart of the
+paper; everything else in the framework plugs into them.
+
+Conventions
+-----------
+* ``m`` is the *expected* number of communicating clients (a python int or a
+  traced scalar).
+* Clients with ``u_i == 0`` receive ``p_i = 0``: a zero-norm update carries no
+  information and contributes ``w_i/p_i * U_i = 0`` regardless, so excluding it
+  keeps the estimator unbiased (the paper's Remark after Eq. 7 — "at most m
+  non-zero updates" is the alpha=0 case).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def optimal_probabilities(u: jax.Array, m: int) -> jax.Array:
+    """Exact optimal inclusion probabilities, Eq. (7) of the paper.
+
+    Sort norms ascending: s_(1) <= ... <= s_(n).  Let ``l`` be the largest
+    integer such that ``0 < m + l - n <= sum_{j<=l} s_(j) / s_(l)``.  The
+    ``n - l`` largest-norm clients get ``p = 1``; client ``i`` among the rest
+    gets ``p_i = (m + l - n) * u_i / sum_{j<=l} s_(j)``.
+    """
+    u = jnp.asarray(u)
+    n = u.shape[0]
+    s = jnp.sort(u)  # ascending
+    csum = jnp.cumsum(s)
+    ls = jnp.arange(1, n + 1)  # candidate l values
+    budget = m + ls - n  # m + l - n
+    # condition: 0 < budget <= csum[l-1] / s[l-1]; guard s==0 (ratio -> +inf,
+    # condition holds whenever budget > 0).
+    ratio = jnp.where(s > _EPS, csum / jnp.maximum(s, _EPS), jnp.inf)
+    ok = (budget > 0) & (budget <= ratio)
+    # ok always holds for l = n - m + 1 (paper); take the largest ok l.
+    l = jnp.max(jnp.where(ok, ls, 0))
+    denom = jnp.take(csum, l - 1)  # sum of the l smallest norms
+    scale = (m + l - n) / jnp.maximum(denom, _EPS)
+    p_small = u * scale
+    # thresholding: clients with norm >= s_(l+1) (i.e. the n-l largest) get 1.
+    # Equivalently: rank-based.  Use ranks to break ties exactly like a sort.
+    order = jnp.argsort(u)
+    ranks = jnp.zeros(n, dtype=jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    in_A = ranks >= l  # the (n - l) largest
+    p = jnp.where(in_A, 1.0, p_small)
+    p = jnp.clip(p, 0.0, 1.0)
+    p = jnp.where(u <= _EPS, jnp.where(in_A, p, 0.0), p)
+    return p
+
+
+def aocs_probabilities(u: jax.Array, m: int, j_max: int = 4) -> jax.Array:
+    """Approximate optimal client sampling (Algorithm 2), aggregation-only.
+
+    Start from ``p_i = min(m * u_i / sum(u), 1)`` and run at most ``j_max``
+    rescaling rounds: with ``I = #{i : p_i < 1}`` and ``P = sum_{p_i < 1} p_i``,
+    set ``C = (m - n + I)/P`` and ``p_i <- min(C p_i, 1)`` for the non-saturated
+    clients, stopping once ``C <= 1``.  Every quantity the master needs
+    (``sum u``, ``I``, ``P``) is a sum over clients — secure-aggregation
+    compatible, stateless.
+    """
+    u = jnp.asarray(u)
+    n = u.shape[0]
+    total = jnp.sum(u)
+    p0 = jnp.minimum(m * u / jnp.maximum(total, _EPS), 1.0)
+    p0 = jnp.where(u <= _EPS, 0.0, p0)
+
+    def body(carry):
+        p, j, done = carry
+        # literal Alg. 2: every client with p_i < 1 reports t_i = (1, p_i);
+        # zero-norm clients count toward I (their p stays 0 since C*0 = 0).
+        not_sat = p < 1.0
+        I = jnp.sum(not_sat)  # noqa: E741
+        P = jnp.sum(jnp.where(not_sat, p, 0.0))
+        C = (m - n + I) / jnp.maximum(P, _EPS)
+        p_new = jnp.where(not_sat, jnp.minimum(C * p, 1.0), p)
+        return p_new, j + 1, C <= 1.0
+
+    def cond(carry):
+        _, j, done = carry
+        return (j < j_max) & (~done)
+
+    p, _, _ = jax.lax.while_loop(cond, body, (p0, jnp.asarray(0), jnp.asarray(False)))
+    return p
+
+
+def uniform_probabilities(u: jax.Array, m: int) -> jax.Array:
+    """Baseline: independent uniform sampling with p_i = m/n."""
+    n = u.shape[0]
+    return jnp.full((n,), m / n, dtype=jnp.result_type(u, jnp.float32))
+
+
+def full_probabilities(u: jax.Array, m: int) -> jax.Array:
+    """Full participation: everyone transmits."""
+    return jnp.ones((u.shape[0],), dtype=jnp.result_type(u, jnp.float32))
+
+
+SAMPLERS = {
+    "optimal": optimal_probabilities,
+    "aocs": aocs_probabilities,
+    "uniform": uniform_probabilities,
+    "full": full_probabilities,
+}

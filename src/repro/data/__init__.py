@@ -1,0 +1,10 @@
+"""Synthetic federated datasets (offline container)."""
+
+from repro.data.synthetic import (  # noqa: F401
+    FederatedDataset,
+    charlm,
+    cifar_like,
+    eval_split,
+    femnist_like,
+    quadratics,
+)

@@ -1,0 +1,4 @@
+"""Federated runtime: rounds, trainer, client-pool utilities."""
+
+from repro.fl.round import client_weights, make_local_update, make_round  # noqa: F401
+from repro.fl.trainer import History, run_training  # noqa: F401

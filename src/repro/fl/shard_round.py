@@ -1,0 +1,112 @@
+"""shard_map variant of the FL round: explicit collectives instead of GSPMD
+inference.
+
+The pjit/GSPMD round (repro.fl.round) lets XLA choose the collectives; this
+variant spells the paper's communication pattern out with jax.lax primitives,
+which (a) documents exactly which collective each protocol step is, and
+(b) gives §Perf a hand-scheduled baseline to compare GSPMD against:
+
+  step                              collective (axis = clients)
+  ------------------------------   ---------------------------
+  u_i = ||w_i U_i||                 none (local reduce)
+  master aggregates norms (Alg. 2)  all_gather of one float / client
+  p_i, mask_i                       local, deterministic given key
+  G = sum_i mask_i (w_i/p_i) U_i    psum over the client axis
+
+Each mesh shard owns ``n_clients / axis_size`` clients; model dims stay
+un-sharded inside the shard_map body (suitable for the small/medium models
+the paper trains; the GSPMD path is the one that scales to the 777B configs).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import FLConfig
+from repro.core import sampling
+from repro.fl.round import RoundMetrics, make_local_update
+
+
+def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str = "data"):
+    """Returns round_step(params, opt_state, batch, weights, key) with the
+    client dimension sharded over ``client_axis`` of ``mesh``."""
+    local_update = make_local_update(loss_fn, fl)
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
+    assert fl.n_clients % axis_size == 0, (fl.n_clients, axis_size)
+
+    def body(params, batch, weights, key):
+        # params/key replicated; batch/weights sharded on the client axis.
+        updates, losses = jax.vmap(local_update, in_axes=(None, 0))(params, batch)
+
+        # local client norms (one float per owned client)
+        sq = jax.tree_util.tree_reduce(
+            lambda acc, leaf: acc
+            + jnp.sum(
+                jnp.square(leaf.astype(jnp.float32)),
+                axis=tuple(range(1, leaf.ndim)),
+            ),
+            updates,
+            jnp.zeros((weights.shape[0],), jnp.float32),
+        )
+        u_local = weights.astype(jnp.float32) * jnp.sqrt(sq)
+
+        # Algorithm 2's aggregation: the master only ever sees sums/gathers of
+        # scalars — here an all_gather of one float per client.
+        u_all = jax.lax.all_gather(u_local, client_axis, tiled=True)     # (n,)
+        fn = sampling.SAMPLERS[fl.sampler]
+        p_all = (
+            fn(u_all, fl.expected_clients, fl.j_max)
+            if fl.sampler == "aocs"
+            else fn(u_all, fl.expected_clients)
+        )
+        mask_all = jax.random.bernoulli(key, jnp.clip(p_all, 0, 1), p_all.shape)
+
+        idx = jax.lax.axis_index(client_axis)
+        k = weights.shape[0]
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, idx * k, k)
+        p_local, mask_local = sl(p_all), sl(mask_all)
+        scale = jnp.where(
+            mask_local & (p_local > 1e-12),
+            weights / jnp.maximum(p_local, 1e-12),
+            0.0,
+        )
+
+        # client -> master: psum of the scaled updates over the client axis
+        def agg(leaf):
+            s = scale.reshape((k,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+            return jax.lax.psum(
+                jnp.sum(leaf.astype(jnp.float32) * s, axis=0), client_axis
+            )
+
+        aggregate = jax.tree_util.tree_map(agg, updates)
+        new_params = jax.tree_util.tree_map(
+            lambda pp, gg: (pp - fl.lr_global * gg).astype(pp.dtype), params, aggregate
+        )
+        loss = jax.lax.pmean(jnp.mean(losses), client_axis)
+        return new_params, (loss, u_all, p_all, mask_all)
+
+    shard_fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(client_axis), P(client_axis), P()),
+        out_specs=(P(), (P(), P(), P(), P())),
+        check_vma=False,
+    )
+
+    def round_step(params, opt_state, batch, weights, key):
+        new_params, (loss, u, p, mask) = shard_fn(params, batch, weights, key)
+        from repro.core.improvement import improvement_factors
+
+        alpha, gamma = improvement_factors(u, fl.expected_clients)
+        metrics = RoundMetrics(
+            loss=loss, alpha=alpha, gamma=gamma,
+            expected_clients=jnp.sum(p), sent_clients=jnp.sum(mask),
+            probs=p, norms=u, mask=mask,
+        )
+        return new_params, opt_state, metrics
+
+    return round_step

@@ -1,0 +1,76 @@
+"""Host-side federated training loop: per-round client-pool sampling (the
+paper samples n available clients uniformly from the pool each round), batch
+assembly, the jitted round step, and metric/bits bookkeeping."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.bits import BitsLedger
+from repro.fl.round import client_weights, make_round
+
+
+@dataclass
+class History:
+    loss: list = field(default_factory=list)
+    acc: list = field(default_factory=list)
+    bits: list = field(default_factory=list)       # cumulative uplink bits
+    alpha: list = field(default_factory=list)
+    gamma: list = field(default_factory=list)
+    sent: list = field(default_factory=list)
+
+    def as_arrays(self):
+        return {k: np.asarray(v) for k, v in self.__dict__.items()}
+
+
+def run_training(
+    dataset,
+    init_fn,
+    loss_fn,
+    fl: FLConfig,
+    rounds: int,
+    batch_size: int = 20,
+    eval_fn=None,
+    eval_batch=None,
+    eval_every: int = 5,
+    seed: int = 0,
+    local_epoch: bool = True,
+):
+    """Train for ``rounds`` communication rounds; returns (params, History).
+
+    ``local_epoch``: paper setting — each client runs 1 epoch over its local
+    data per round, so the number of local steps varies with client size
+    (capped at fl.local_steps buckets of ``batch_size``).
+    """
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = init_fn(jax.random.fold_in(key, 1))
+    dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    ledger = BitsLedger(dim)
+    round_step = jax.jit(make_round(loss_fn, fl))
+    weights = client_weights(fl)
+    hist = History()
+    total_bits = 0
+
+    for k in range(rounds):
+        clients = rng.choice(dataset.n_clients, size=fl.n_clients, replace=False)
+        batch = dataset.sample_round_batches(rng, clients, fl.local_steps, batch_size)
+        batch = {k_: jnp.asarray(v) for k_, v in batch.items()}
+        params, _, metrics = round_step(
+            params, (), batch, weights, jax.random.fold_in(key, 1000 + k)
+        )
+        total_bits += int(ledger.round_bits(metrics.mask, fl.sampler, fl.n_clients, fl.j_max,
+                                    fl.compression, fl.compression_param))
+        hist.loss.append(float(metrics.loss))
+        hist.alpha.append(float(metrics.alpha))
+        hist.gamma.append(float(metrics.gamma))
+        hist.sent.append(int(metrics.sent_clients))
+        hist.bits.append(total_bits)
+        if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
+            hist.acc.append((k, float(eval_fn(params, eval_batch))))
+    return params, hist

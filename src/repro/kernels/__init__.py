@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp oracle
+in ref.py and a jitted wrapper in ops.py (interpret=True on CPU):
+
+* flash_attention — causal/sliding-window/prefix-LM, online softmax in VMEM
+* client_norm     — fused per-client update-norm reduction (OCS Alg. 1 line 3)
+* ssd_scan        — chunked Mamba2 SSD with VMEM recurrent-state carry
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

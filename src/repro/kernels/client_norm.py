@@ -1,0 +1,53 @@
+"""Fused per-client squared-norm reduction — the one op OCS adds to the
+training critical path (paper Algorithm 1 line 3: u_i = ||w_i U_i||).
+
+TPU adaptation: the update tree for one client is a flat HBM-resident vector
+of up to ~10^11 elements.  A naive jnp implementation materialises the
+squared intermediate in HBM; this kernel streams (clients, chunk)-tiles
+HBM->VMEM, squares and row-reduces in VREGs, and accumulates one f32 partial
+per grid step into a (clients,) output — a single pass over HBM at full
+bandwidth, no intermediate writes.
+
+Grid: (num_chunks,).  Block: (C, CHUNK) of the (C, D) client-major update
+matrix; the output block (C,) maps to the same block for every grid step so
+the accumulation stays in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sqnorm_kernel(x_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(x * x, axis=-1)
+
+
+def client_sqnorms_pallas(
+    updates: jax.Array, chunk: int = 4096, interpret: bool = False
+) -> jax.Array:
+    """updates: (clients, D) -> (clients,) f32 squared norms.
+
+    D is padded to a multiple of ``chunk`` by the wrapper in ops.py.
+    """
+    c, d = updates.shape
+    assert d % chunk == 0, (d, chunk)
+    grid = (d // chunk,)
+    return pl.pallas_call(
+        _sqnorm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((c, chunk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((c,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=interpret,
+    )(updates)

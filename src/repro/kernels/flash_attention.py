@@ -1,0 +1,114 @@
+"""Flash attention Pallas kernel (causal, optional sliding window, optional
+bidirectional prefix) — the dominant compute hot-spot of the models being
+federatedly trained/served.
+
+TPU adaptation of the GPU flash algorithm:
+* BlockSpec tiles (BLOCK_Q x head_dim) query tiles and (BLOCK_K x head_dim)
+  key/value tiles into VMEM; head_dim (128/256 here) is the MXU lane dim and
+  BLOCK sizes are multiples of 128 so the (BLOCK_Q x BLOCK_K) logits tile
+  maps onto the 128x128 systolic array without padding.
+* Online softmax carries (m, l, acc) in VMEM across the K-grid dimension
+  (sequential innermost grid axis on TPU), instead of the GPU's
+  shared-memory/warp version.
+* Grid: (batch*heads, num_q_blocks, num_k_blocks); the K axis is innermost so
+  the accumulator revisits the same output block (TPU grids iterate
+  sequentially, giving us the carry for free).
+
+Validated in interpret mode against ``ref.py`` over shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale,
+                  block_q, block_k, seq_len, window, prefix):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (bq, bk)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    if prefix:
+        mask |= (q_pos < prefix) & (k_pos < prefix)
+    mask &= (k_pos < seq_len) & (q_pos < seq_len)
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev, l_prev, acc = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc = acc * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention_pallas(
+    q, k, v, *, causal=True, window=None, prefix=0,
+    block_q=128, block_k=128, interpret=False,
+):
+    """q,k,v: (BH, S, d) with kv already head-repeated.  Returns (BH, S, d)."""
+    assert causal, "kernel implements the causal family (window/prefix variants)"
+    bh, s, d = q.shape
+    bq, bk = min(block_q, s), min(block_k, s)
+    nq, nk = -(-s // bq), -(-s // bk)
+    pq, pk = nq * bq - s, nk * bk - s
+    if pq or pk:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (d ** 0.5), block_q=bq, block_k=bk,
+        seq_len=s, window=window, prefix=prefix,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq * bq, d), q.dtype),
+        scratch_shapes=[
+            # VMEM carries for the online softmax (persist across the K grid)
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s, :]

@@ -1,0 +1,69 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs in Python, validating the exact TPU program); on a real TPU
+set ``interpret=False`` (the default flips on backend detection)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.client_norm import client_sqnorms_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def client_sqnorms(updates: jax.Array, chunk: int = 4096, interpret: bool | None = None):
+    """(clients, D) -> (clients,) f32 squared norms, fused single HBM pass."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    c, d = updates.shape
+    chunk = min(chunk, max(d, 1))
+    pad = (-d) % chunk
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    return client_sqnorms_pallas(updates, chunk=chunk, interpret=interpret)
+
+
+def tree_client_norms(updates_tree, weights, chunk: int = 4096, interpret=None):
+    """Kernel-backed equivalent of repro.core.ocs.client_norms."""
+    leaves = jax.tree_util.tree_leaves(updates_tree)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+    sq = client_sqnorms(flat, chunk=chunk, interpret=interpret)
+    return weights.astype(jnp.float32) * jnp.sqrt(sq)
+
+
+@partial(jax.jit, static_argnames=("window", "prefix", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, window=None, prefix=0, block_q=128, block_k=128,
+                    interpret: bool | None = None):
+    """(BH, S, d) causal flash attention (optional window / prefix-LM)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_pallas(
+        q, k, v, window=window, prefix=prefix,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, b, c, dt, da, *, chunk=128, interpret: bool | None = None):
+    """Chunked SSD scan (Mamba2).  x:(BH,S,P) b,c:(BH,S,N) dt,da:(BH,S).
+    Pads S to a chunk multiple with dt=0 identity steps."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    bh, s, p = x.shape
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, b, c, dt, da = map(zpad, (x, b, c, dt, da))
+    y, state = ssd_scan_pallas(x, b, c, dt, da, chunk=chunk, interpret=interpret)
+    return y[:, :s], state

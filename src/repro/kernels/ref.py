@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def client_sqnorms_ref(updates):
+    """(clients, D) -> (clients,) f32 squared norms."""
+    x = updates.astype(jnp.float32)
+    return jnp.sum(x * x, axis=-1)
+
+
+def flash_attention_ref(q, k, v, *, window=None, prefix=0):
+    """(BH, S, d) causal attention with optional sliding window / prefix."""
+    bh, s, d = q.shape
+    logits = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(d)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = j <= i
+    if window is not None:
+        mask &= (i - j) < window
+    if prefix:
+        mask |= (i < prefix) & (j < prefix)
+    logits = jnp.where(mask[None], logits, jnp.finfo(jnp.float32).min)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bst,btd->bsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, b, c, dt, da):
+    """Sequential SSD recurrence oracle.  x:(BH,S,P) b,c:(BH,S,N) dt,da:(BH,S)."""
+    import jax
+
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def per_bh(x1, b1, c1, dt1, da1):
+        def step(state, inp):
+            xt, bt, ct, dtt, dat = inp
+            state = state * jnp.exp(dat) + dtt * (xt[:, None] * bt[None, :])
+            y = state @ ct
+            return state, y
+
+        state0 = jnp.zeros((p, n), jnp.float32)
+        state, ys = jax.lax.scan(
+            step, state0,
+            (x1.astype(jnp.float32), b1.astype(jnp.float32),
+             c1.astype(jnp.float32), dt1.astype(jnp.float32),
+             da1.astype(jnp.float32)),
+        )
+        return ys, state
+
+    import jax as _jax
+
+    ys, states = _jax.vmap(per_bh)(x, b, c, dt, da)
+    return ys, states

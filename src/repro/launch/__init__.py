@@ -1,0 +1,1 @@
+"""Launch: production mesh, dry-run, sharding rules, training/serving drivers."""

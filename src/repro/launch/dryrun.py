@@ -1,0 +1,271 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, extract roofline terms, write JSON artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+This module — and ONLY this module — forces 512 host platform devices so the
+production mesh exists on the CPU container; it must run as its own process.
+"""
+
+# The first two lines, before ANY other import (jax locks device count on init):
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.base import InputShape, ModelConfig
+from repro.fl.round import client_weights, make_round
+from repro.launch import roofline as RL
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/artifacts/dryrun")
+
+# long_500k requires a sub-quadratic decode state.  'window' = run with an
+# explicit sliding-window variant (documented adaptation); 'skip' = pure
+# full-attention arch, no SWA claim in the source model (see DESIGN.md).
+LONG_500K_POLICY = {
+    "mamba2-130m": "run",        # SSM: O(1) state
+    "zamba2-2.7b": "window",     # hybrid: window the shared-attn cache
+    "mixtral-8x7b": "run",       # native SWA-4096
+    "llama3-8b": "window",       # beyond-paper SWA variant, opt-in
+    "llama4-maverick-400b-a17b": "skip",
+    "granite-20b": "skip",
+    "granite-8b": "skip",
+    "gemma-7b": "skip",
+    "whisper-small": "skip",     # also: 500k tokens is meaningless for 30s audio
+    "paligemma-3b": "skip",
+}
+WINDOW_VARIANT = 4096
+
+
+def resolve_config(arch: str, shape: InputShape):
+    """Returns (cfg, note) or (None, skip_reason)."""
+    cfg = ARCHS[arch]
+    if shape.name == "long_500k":
+        policy = LONG_500K_POLICY[arch]
+        if policy == "skip":
+            return None, "skipped: full-attention arch, no sub-quadratic variant"
+        if policy == "window":
+            return (
+                cfg.with_(sliding_window=WINDOW_VARIANT),
+                f"sliding-window={WINDOW_VARIANT} variant",
+            )
+    return cfg, ""
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def build_lowered(cfg: ModelConfig, shape: InputShape, mesh, fl_mode: str = "vmap",
+                  fsdp: bool = True, donate: bool = False, out_shard: bool = False,
+                  expert_parallel: bool = False, kv_mode: str = "hd",
+                  scan_group: int = 2):
+    if expert_parallel and cfg.num_experts:
+        data_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+        if cfg.num_experts % data_size == 0:
+            cfg = cfg.with_(moe_ep_axis="data")
+    model = build_model(cfg)
+    params_sds = SP.params_spec(model)
+    p_sh = SH.param_shardings(params_sds, mesh, fsdp=fsdp, expert_parallel=expert_parallel)
+    key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    if shape.mode == "train":
+        fl = SP.fl_config_for(cfg, shape)
+        step = make_round(model.loss, fl, mode=fl_mode, scan_group=scan_group)
+        batch_sds = SP.train_inputs(cfg, shape, fl)
+        b_sh = SH.batch_shardings(batch_sds, mesh)
+        w_sds = jax.ShapeDtypeStruct((fl.n_clients,), jnp.float32)
+        out_sh = None
+        if out_shard:
+            # constrain updated params to the storage sharding: the client
+            # aggregation lowers to reduce-scatter instead of all-reduce.
+            metrics_sh = jax.tree_util.tree_map(
+                lambda _: rep,
+                jax.eval_shape(
+                    step, params_sds, (), batch_sds, w_sds, key_sds
+                )[2],
+            )
+            out_sh = (p_sh, (), metrics_sh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, (), b_sh, rep, rep),
+            out_shardings=out_sh,
+            donate_argnums=(0,) if donate else (),
+        )
+        return jitted.lower(params_sds, (), batch_sds, w_sds, key_sds)
+
+    if shape.mode == "prefill":
+        batch_sds = SP.prefill_inputs(cfg, shape)
+        b_sh = SH.batch_shardings(batch_sds, mesh)
+        fn = lambda p, b: model.prefill(p, b, shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        return jitted.lower(params_sds, batch_sds)
+
+    # decode
+    if kv_mode == "factored" and cfg.num_kv_heads:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        kv = min(cfg.num_kv_heads, sizes["model"])
+        if sizes["model"] % kv == 0:
+            mesh_f = SH.make_factored_mesh(mesh, kv)
+            tok_sds, cache_sds, pos_sds = SP.decode_inputs(cfg, shape, model)
+            p_shf = SH.factored_param_shardings(params_sds, mesh_f, fsdp=fsdp)
+            t_shf = SH.batch_shardings({"t": tok_sds}, mesh_f)["t"]
+            c_shf = SH.factored_cache_shardings(cache_sds, mesh_f)
+            repf = jax.sharding.NamedSharding(mesh_f, jax.sharding.PartitionSpec())
+            jitted = jax.jit(model.decode_step, in_shardings=(p_shf, t_shf, c_shf, repf))
+            return jitted.lower(params_sds, tok_sds, cache_sds, pos_sds)
+    if kv_mode == "proj":
+        p_sh = SH.param_shardings(params_sds, mesh, fsdp=fsdp,
+                                  expert_parallel=expert_parallel, kv_in_shard=True)
+    tok_sds, cache_sds, pos_sds = SP.decode_inputs(cfg, shape, model)
+    t_sh = SH.batch_shardings({"t": tok_sds}, mesh)["t"]
+    c_sh = SH.cache_shardings(cache_sds, mesh, mode="hd" if kv_mode == "proj" else kv_mode)
+    out_sh = (None, c_sh) if out_shard else None
+    jitted = jax.jit(model.decode_step, in_shardings=(p_sh, t_sh, c_sh, rep),
+                     out_shardings=out_sh)
+    return jitted.lower(params_sds, tok_sds, cache_sds, pos_sds)
+
+
+def run_pair(arch: str, shape_name: str, mesh, mesh_name: str, out_dir: str,
+             fl_mode: str = "vmap", fsdp: bool = True, tag: str = "",
+             out_shard: bool = False, expert_parallel: bool = False,
+             kv_mode: str = "hd", scan_group: int = 2):
+    shape = SHAPES[shape_name]
+    cfg, note = resolve_config(arch, shape)
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}{tag}.json")
+    if cfg is None:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "skipped": note}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] {arch} x {shape_name}: {note}")
+        return rec
+
+    chips = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        lowered = build_lowered(cfg, shape, mesh, fl_mode=fl_mode, fsdp=fsdp,
+                                out_shard=out_shard, expert_parallel=expert_parallel,
+                                kv_mode=kv_mode, scan_group=scan_group)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    try:
+        mem = compiled.memory_analysis()
+        peak = getattr(mem, "temp_size_in_bytes", None)
+        mem_fields = {
+            k: getattr(mem, k)
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception:
+        peak, mem_fields = None, {}
+
+    hlo = compiled.as_text()
+    coll = RL.parse_collectives(hlo)
+    rf = RL.build_roofline(
+        arch, shape_name, mesh_name, chips, cost, coll,
+        model_flops(cfg, shape), peak_memory=peak,
+        notes=note + (f" fl_mode={fl_mode}" if shape.mode == "train" else "")
+        + (" out_shard" if out_shard else "")
+        + (" expert_parallel" if expert_parallel else "")
+        + (f" kv={kv_mode}" if kv_mode != "hd" else ""),
+    )
+    rec = json.loads(rf.to_json())
+    rec.update(
+        {
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": mem_fields,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        }
+    )
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(
+        f"[dryrun] {arch} x {shape_name} ({mesh_name}{tag}): OK "
+        f"compute={rf.compute_s:.3e}s memory={rf.memory_s:.3e}s "
+        f"collective={rf.collective_s:.3e}s bottleneck={rf.bottleneck} "
+        f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fl-mode", default="vmap", choices=["vmap", "scan"])
+    ap.add_argument("--scan-group", type=int, default=2)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out-shard", action="store_true")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--kv-mode", default="hd", choices=["hd", "batch", "seq", "proj", "factored"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "pod2" if args.multi_pod else "pod1"
+    out_dir = args.out or os.path.normpath(os.path.join(ARTIFACT_DIR, mesh_name))
+
+    pairs = []
+    if args.all:
+        pairs = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in pairs:
+        try:
+            run_pair(arch, shape, mesh, mesh_name, out_dir,
+                     fl_mode=args.fl_mode, fsdp=not args.no_fsdp, tag=args.tag,
+                     out_shard=args.out_shard, expert_parallel=args.expert_parallel,
+                     kv_mode=args.kv_mode, scan_group=args.scan_group)
+        except Exception as e:
+            failures.append((arch, shape, repr(e)))
+            print(f"[dryrun] {arch} x {shape}: FAILED {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all pairs OK")
+
+
+if __name__ == "__main__":
+    main()

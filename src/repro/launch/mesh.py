@@ -1,0 +1,30 @@
+"""Production mesh definitions (TPU v5e pods).
+
+A function, not a module-level constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires forced host device count >= 4)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def client_axes(mesh) -> tuple:
+    """Mesh axes the FL client dimension is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# TPU v5e hardware constants for the roofline model
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,161 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch, shape, mesh), per the brief:
+
+  compute   = HLO_FLOPs_per_chip / peak_FLOP/s           (197 TF bf16, v5e)
+  memory    = HLO_bytes_per_chip / HBM_bw                 (819 GB/s)
+  collective= collective_bytes_per_chip / link_bw         (~50 GB/s/link)
+
+``cost_analysis()`` operates on the *partitioned* module, so flops/bytes are
+per-chip already.  Collective bytes are not in cost_analysis: we parse the
+partitioned HLO text and sum a ring-model traffic estimate per op
+(all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g of the
+full tensor, collective-permute 1x).  We also report the raw summed operand
+bytes (the brief's simpler convention) as ``collective_bytes_raw``.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    raw_bytes: dict = field(default_factory=dict)       # summed result bytes
+    traffic_bytes: dict = field(default_factory=dict)   # ring-model per chip
+
+    def total_raw(self):
+        return sum(self.raw_bytes.values())
+
+    def total_traffic(self):
+        return sum(self.traffic_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        g = _group_size(line)
+        if op == "all-reduce":
+            traffic = 2 * nbytes * (g - 1) / g
+        elif op == "all-gather":
+            traffic = nbytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            traffic = nbytes * (g - 1)      # result is the scattered shard
+        elif op == "all-to-all":
+            traffic = nbytes * (g - 1) / g
+        else:  # collective-permute
+            traffic = nbytes
+        st.counts[op] = st.counts.get(op, 0) + 1
+        st.raw_bytes[op] = st.raw_bytes.get(op, 0) + nbytes
+        st.traffic_bytes[op] = st.traffic_bytes.get(op, 0) + traffic
+    return st
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_raw: float
+    collective_traffic_per_chip: float
+    collective_counts: dict
+    compute_s: float
+    compute_model_s: float   # analytic floor: MODEL_FLOPS/(chips*peak) —
+                             # cost_analysis counts while-loop bodies once, so
+                             # compute_s undercounts scanned programs.
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # 6 * N_active * D (global)
+    useful_flops_ratio: float    # model_flops / (flops_per_chip * chips)
+    peak_memory_bytes: float | None = None
+    notes: str = ""
+
+    def to_json(self):
+        return json.dumps(asdict(self), indent=1)
+
+
+def build_roofline(
+    arch, shape, mesh_name, chips, cost, coll: CollectiveStats,
+    model_flops: float, peak_memory=None, notes="",
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    compute_s = flops / PEAK_FLOPS_BF16
+    compute_model_s = model_flops / (chips * PEAK_FLOPS_BF16)
+    memory_s = nbytes / HBM_BW
+    coll_s = coll.total_traffic() / ICI_BW
+    terms = {
+        "compute": max(compute_s, compute_model_s),
+        "memory": memory_s,
+        "collective": coll_s,
+    }
+    bottleneck = max(terms, key=terms.get)
+    total_hlo = flops * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, hbm_bytes_per_chip=nbytes,
+        collective_bytes_raw=coll.total_raw(),
+        collective_traffic_per_chip=coll.total_traffic(),
+        collective_counts=coll.counts,
+        compute_s=compute_s, compute_model_s=compute_model_s,
+        memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / total_hlo) if total_hlo else 0.0,
+        peak_memory_bytes=peak_memory,
+        notes=notes,
+    )

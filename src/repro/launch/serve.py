@@ -1,0 +1,68 @@
+"""Serving driver: batched prefill + greedy decode for any architecture
+(reduced configs run on CPU; full configs are exercised via the dry-run).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b-reduced \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get(args.arch)
+    model = build_model(cfg, remat=False)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    rng = np.random.default_rng(0)
+    b, s = args.batch, args.prompt_len
+    cache_len = s + args.gen
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.encoder_seq:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)) * 0.02, jnp.float32
+        )
+    if cfg.prefix_tokens:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.prefix_tokens, cfg.d_model)) * 0.02, jnp.float32
+        )
+
+    prefill = jax.jit(lambda p, bb: model.prefill(p, bb, cache_len))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    print(f"[serve] prefill {b}x{s} in {time.time()-t0:.2f}s")
+    out = [tok]
+    t0 = time.time()
+    prefix = cfg.prefix_tokens or 0
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, tok, cache, jnp.asarray(s + prefix + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    toks = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"[serve] generated {args.gen-1} steps x {b} seqs in {dt:.2f}s "
+          f"({(args.gen-1)*b/max(dt,1e-9):.1f} tok/s)")
+    print("[serve] sample token ids:", toks[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

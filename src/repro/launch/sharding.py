@@ -1,0 +1,236 @@
+"""PartitionSpec rules for params, batches and caches.
+
+Baseline scheme: tensor parallelism over 'model' on head/ffn/vocab dims,
+optional FSDP over 'data' on the complementary dim, FL clients / serving
+batch over ('pod','data').  Any dim not divisible by its axis size falls
+back to replication (guarded here, so every assigned arch lowers)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# base (right-aligned) axis roles per leaf name; F = fsdp('data'), M = 'model'
+_BASE_RULES = {
+    "embedding": ("M", "F"),
+    "lm_head": ("F", "M"),
+    "wq": ("F", "M"),
+    "wk": ("F", "M"),
+    "wv": ("F", "M"),
+    "wo": ("M", "F"),
+    "router": ("F", None),
+    "in_proj": ("F", "M"),
+    "out_proj": ("M", "F"),
+    "conv_w": ("M", None),
+    "conv_b": ("M",),
+    "norm_scale": ("M",),
+    "b_up": ("M",),
+    "b_down": (None,),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "scale": (None,),
+    "bias": (None,),
+}
+# MoE expert tensors carry a leading E dim treated as a stack dim (replicated
+# in the baseline scheme; the expert-parallel variant remaps it — see §Perf).
+_GATED = {"w_gate", "w_up"}
+_DOWN = {"w_down"}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if k is not None:
+            return str(k)
+    return ""
+
+
+def _spec_for(name: str, shape, mesh, fsdp: bool, expert_parallel: bool = False):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    f_axis = "data" if (fsdp and "data" in axis_sizes) else None
+
+    if name in _GATED:
+        base = ("F", "M")
+    elif name in _DOWN:
+        base = ("M", "F")
+    elif name in _BASE_RULES:
+        base = _BASE_RULES[name]
+    else:
+        base = ()
+
+    # expert-parallel variant (§Perf): shard the expert dim of MoE tensors
+    # over 'data' (replacing FSDP) and keep d_ff tensor-parallel over 'model'.
+    # Expert weights then stay fully resident on their owners — the per-layer
+    # FSDP weight all-gather is replaced by a (much smaller) token all-to-all.
+    if (
+        expert_parallel
+        and name in (_GATED | _DOWN)
+        and len(shape) >= 3
+        and shape[-3] % axis_sizes.get("data", 1) == 0
+    ):
+        nd = len(shape)
+        spec = [None] * nd
+        spec[-3] = "data"
+        ff_dim = -1 if name in _GATED else -2
+        if shape[ff_dim] % axis_sizes.get("model", 1) == 0:
+            spec[ff_dim] = "model"
+        return P(*spec)
+
+    nd = len(shape)
+    spec = [None] * nd
+    for i, role in enumerate(base[::-1]):
+        dim = nd - 1 - i
+        if dim < 0:
+            break
+        if role == "M":
+            ax = "model"
+        elif role == "F":
+            ax = f_axis
+        else:
+            ax = None
+        if ax is not None and shape[dim] % axis_sizes.get(ax, 1) == 0 and shape[dim] > 0:
+            spec[dim] = ax
+    return P(*spec)
+
+
+def param_shardings(params_shape, mesh, fsdp: bool = True, expert_parallel: bool = False,
+                    kv_in_shard: bool = False):
+    """Pytree of NamedSharding matching a ShapeDtypeStruct (or array) tree.
+
+    kv_in_shard (§Perf, decode): shard wk/wv on the INPUT dim instead of the
+    head dim, so decode-step K/V come out replicated (one tiny psum) and the
+    cache write never conflicts with GSPMD's in-loop layout preference."""
+
+    def per_leaf(path, leaf):
+        name = _leaf_name(path)
+        if kv_in_shard and name in ("wk", "wv"):
+            axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            spec = [None] * leaf.ndim
+            if leaf.shape[-2] % axis_sizes.get("model", 1) == 0:
+                spec[-2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(
+            mesh, _spec_for(name, leaf.shape, mesh, fsdp, expert_parallel)
+        )
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shape)
+
+
+def batch_shardings(batch_shape, mesh, leading_axes=None):
+    """Shard the leading (client or batch) dim over ('pod','data')."""
+    if leading_axes is None:
+        leading_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([axis_sizes[a] for a in leading_axes]))
+
+    def per_leaf(leaf):
+        if leaf.ndim and leaf.shape[0] % total == 0:
+            return NamedSharding(mesh, P(leading_axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(per_leaf, batch_shape)
+
+
+def cache_shardings(cache_shape, mesh, mode: str = "hd"):
+    """KV caches: (L, B, T, kvh, hd) — B over ('pod','data') plus, per mode:
+    'hd'    : head_dim (or dim -2) over 'model'   (baseline)
+    'batch' : batch only; model axis replicated   (§Perf variant A)
+    'seq'   : cache T dim over 'model'            (§Perf variant B — flash-
+              decode style: per-shard partial softmax, tiny all-reduces)
+    SSM states follow the 'hd' rule on their trailing dims in every mode."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = int(np.prod([axis_sizes[a] for a in dp]))
+    m = axis_sizes.get("model", 1)
+
+    def per_leaf(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % dp_total == 0:
+            spec[1] = dp
+        is_kv = leaf.ndim == 5  # (L,B,T,kvh,hd); ssm states are 4/5-d too but
+        # seq mode only applies to the T dim of genuine kv buffers
+        if mode == "seq" and is_kv and leaf.shape[2] % m == 0 and leaf.shape[2] > m:
+            spec[2] = "model"
+        elif mode != "batch" and leaf.ndim >= 3:
+            if leaf.shape[-1] % m == 0:
+                spec[-1] = "model"
+            elif leaf.shape[-2] % m == 0:
+                spec[-2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(per_leaf, cache_shape)
+
+
+def replicated(tree_shape, mesh):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree_shape)
+
+
+# --------------------------------------------------------------------------
+# factored serving mesh (§Perf): same chips, model axis split into
+# ('model_kv', 'model_hd') so the KV cache can be sharded (kvh x hd) exactly
+# the way GSPMD lays out GQA attention inside the decode loop — eliminating
+# the involuntary cache rematerialisation.
+
+
+def make_factored_mesh(mesh, kv: int):
+    """Refactor mesh's 'model' axis (size m) into ('model_kv'=kv, 'model_hd'=m/kv)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes["model"]
+    assert m % kv == 0, (m, kv)
+    shape, names = [], []
+    for ax in mesh.axis_names:
+        if ax == "model":
+            shape += [kv, m // kv]
+            names += ["model_kv", "model_hd"]
+        else:
+            shape.append(sizes[ax])
+            names.append(ax)
+    return jax.make_mesh(tuple(shape), tuple(names))
+
+
+def _translate_factored(sharding, mesh_f):
+    """Map a 'model'-axis PartitionSpec onto the factored mesh."""
+    spec = tuple(
+        ("model_kv", "model_hd") if s == "model" else s for s in sharding.spec
+    )
+    return NamedSharding(mesh_f, P(*spec))
+
+
+def factored_param_shardings(params_shape, mesh_f, fsdp=True):
+    def per_leaf(path, leaf):
+        # reconstruct the unfactored spec then translate
+        name = _leaf_name(path)
+        sizes = dict(zip(mesh_f.axis_names, mesh_f.devices.shape))
+        m_total = sizes.get("model_kv", 1) * sizes.get("model_hd", 1)
+        fake_sizes = {"data": sizes.get("data", 1), "model": m_total}
+        fake = type("M", (), {"axis_names": tuple(fake_sizes), "devices": np.empty(tuple(fake_sizes.values()))})()
+        spec = _spec_for(name, leaf.shape, fake, fsdp)
+        spec = tuple(("model_kv", "model_hd") if s == "model" else s for s in spec)
+        return NamedSharding(mesh_f, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shape)
+
+
+def factored_cache_shardings(cache_shape, mesh_f):
+    """(L,B,T,kvh,hd): B over dp, kvh over 'model_kv', hd over 'model_hd'."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh_f.axis_names)
+    sizes = dict(zip(mesh_f.axis_names, mesh_f.devices.shape))
+    dp_total = int(np.prod([sizes[a] for a in dp]))
+    kv, hd2 = sizes.get("model_kv", 1), sizes.get("model_hd", 1)
+
+    def per_leaf(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % dp_total == 0:
+            spec[1] = dp
+        if leaf.ndim == 5:
+            if leaf.shape[3] % kv == 0:
+                spec[3] = "model_kv"
+            if leaf.shape[4] % hd2 == 0:
+                spec[4] = "model_hd"
+        elif leaf.ndim >= 3 and leaf.shape[-1] % (kv * hd2) == 0:
+            spec[-1] = ("model_kv", "model_hd")
+        return NamedSharding(mesh_f, P(*spec))
+
+    return jax.tree_util.tree_map(per_leaf, cache_shape)

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair —
+weak-type-correct, shardable, zero allocation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, InputShape, ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fl_config_for(cfg: ModelConfig, shape: InputShape, n_clients: int = 32) -> FLConfig:
+    return FLConfig(
+        n_clients=n_clients,
+        expected_clients=6,
+        sampler="aocs",
+        local_steps=1,
+        algorithm="fedavg",
+    )
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, fl: FLConfig):
+    """Batch pytree for one FL round: leaves (n_clients, R, b, ...)."""
+    n, r = fl.n_clients, fl.local_steps
+    assert shape.global_batch % n == 0, (shape.global_batch, n)
+    b = shape.global_batch // n
+    s = shape.seq_len
+    batch = {
+        "tokens": _sds((n, r, b, s), jnp.int32),
+        "targets": _sds((n, r, b, s), jnp.int32),
+    }
+    if cfg.encoder_seq:
+        batch["frames"] = _sds((n, r, b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.prefix_tokens:
+        batch["patches"] = _sds((n, r, b, cfg.prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.encoder_seq:
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.prefix_tokens:
+        batch["patches"] = _sds((b, cfg.prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape, model):
+    """(tokens, cache, pos) stand-ins; cache shapes via eval_shape."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = _sds((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    pos = _sds((), jnp.int32)
+    return tokens, cache, pos
+
+
+def params_spec(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

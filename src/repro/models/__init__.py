@@ -1,0 +1,3 @@
+"""Model substrate: all 10 assigned architectures via build_model(cfg)."""
+
+from repro.models.model import Model, build_model, cross_entropy  # noqa: F401

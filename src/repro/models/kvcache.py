@@ -1,0 +1,39 @@
+"""Cache pytrees for serving.
+
+* ``kv``    : (num_layers, B, T, kv_heads, head_dim) x2 — full or ring buffer
+              (T = sliding window for SWA archs: sub-quadratic long-context).
+* ``ssm``   : (num_mamba_layers, B, H, P, N) + conv buffers — O(1) in seq.
+* ``cross`` : whisper encoder K/V, computed once at prefill.
+
+The dataclass-free dict layout keeps everything a plain pytree for
+jit/scan/sharding.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as S
+
+
+def kv_buffer_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_kv(cfg: ModelConfig, n_layers: int, batch: int, seq_len: int, dtype):
+    t = kv_buffer_len(cfg, seq_len)
+    shape = (n_layers, batch, t, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_ssm(cfg: ModelConfig, n_layers: int, batch: int):
+    d_in, nheads, conv_dim = S.dims(cfg)
+    return {
+        "state": jnp.zeros(
+            (n_layers, batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+    }

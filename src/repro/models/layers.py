@@ -1,0 +1,307 @@
+"""Shared neural building blocks: norms, RoPE, GQA/MQA attention (with
+sliding-window and prefix-LM masks, KV caches), gated MLPs.
+
+Everything is pure-functional: ``init_*`` returns a param pytree (plain
+dicts), ``apply`` functions are jit/vmap/scan friendly.  Weight layouts put
+the sharded dimension last where possible (heads*head_dim, d_ff) so the
+``'model'`` mesh axis maps onto them directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# initialisers
+
+
+def _dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm_kind == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.zeros((d,)) if cfg.norm_offset else jnp.ones((d,))}
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps)
+        scale = params["scale"]
+        out = out * (1.0 + scale) if cfg.norm_offset else out * scale
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd), positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, k = cfg.num_heads, cfg.num_kv_heads
+    keys = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(keys[0], (d, h * hd)),
+        "wk": _dense_init(keys[1], (d, k * hd)),
+        "wv": _dense_init(keys[2], (d, k * hd)),
+        "wo": _dense_init(keys[3], (h * hd, d)),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def _repeat_kv(kv, n_rep):
+    if n_rep == 1:
+        return kv
+    return jnp.repeat(kv, n_rep, axis=-2)
+
+
+def chunked_attention(q, k, v, *, window=None, prefix=0, block_q=512, block_k=512):
+    """Flash-style attention in pure XLA: scan over query blocks, inner scan
+    over key blocks with online-softmax accumulators.  Never materialises the
+    (S, S) score matrix — this is what lets 32k prefill lower within HBM.
+    Causal, with optional sliding window and bidirectional prefix.
+
+    The Pallas kernel in ``repro.kernels.flash_attention`` is the TPU
+    hot-spot version of the same algorithm (same oracle); this path is the
+    portable one used under GSPMD.
+
+    q, k, v: (B, S, H, hd) with kv heads already repeated.  Returns (B,S,H,hd).
+    """
+    b, s, h, hd = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    nq, nk = -(-s // bq), -(-s // bk)
+    pad_q, pad_k = nq * bq - s, nk * bk - s
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))).astype(jnp.float32)
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))).astype(jnp.float32)
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))).astype(jnp.float32)
+    qf = qf.reshape(b, nq, bq, h, hd) / jnp.sqrt(hd)
+    kf = kf.reshape(b, nk, bk, h, hd)
+    vf = vf.reshape(b, nk, bk, h, hd)
+    neg = jnp.finfo(jnp.float32).min
+
+    def q_block(qi, q_i):
+        q_pos = qi * bq + jnp.arange(bq)
+
+        def kv_block(carry, inp):
+            m_prev, l_prev, acc = carry
+            ki, k_j, v_j = inp
+            k_pos = ki * bk + jnp.arange(bk)
+            logits = jnp.einsum("bshd,bthd->bhst", q_i, k_j)
+            msk = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                msk &= (q_pos[:, None] - k_pos[None, :]) < window
+            if prefix:
+                msk |= (q_pos[:, None] < prefix) & (k_pos[None, :] < prefix)
+            msk &= (k_pos[None, :] < s) & (q_pos[:, None] < s)
+            logits = jnp.where(msk[None, None], logits, neg)
+            m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            scale = jnp.exp(m_prev - m_new)
+            l_new = l_prev * scale + jnp.sum(p, axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum("bhst,bthd->bshd", p, v_j).transpose(
+                0, 2, 1, 3
+            ).reshape(b, h, bq, hd)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, bq), neg)
+        l0 = jnp.zeros((b, h, bq))
+        a0 = jnp.zeros((b, h, bq, hd))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block,
+            (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)  # (b, bq, h, hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), jnp.moveaxis(qf, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * bq, h, hd)[:, :s]
+    return out
+
+
+def attention_scores(q, k, v, mask, dtype):
+    """q: (B,S,H,hd) k,v: (B,T,H,hd) mask: broadcastable to (B,H,S,T).
+
+    Operands stay in their native dtype with f32 accumulation
+    (preferred_element_type) — upcasting k/v wholesale would double the KV
+    cache HBM traffic and, under GSPMD, rematerialise the cache through a
+    full all-gather at decode time (measured 2 x 1 GB per step on llama3
+    decode_32k; see EXPERIMENTS.md §Perf)."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhst,bthd->bshd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(dtype)
+
+
+def causal_mask(seq: int, window: int | None = None, prefix: int = 0):
+    """(1,1,S,S) bool mask: causal, optional sliding window, optional
+    bidirectional prefix (prefix-LM / PaliGemma)."""
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= (i - j) < window
+    if prefix:
+        m |= (i < prefix) & (j < prefix)
+    return m[None, None]
+
+
+def apply_attention(
+    params,
+    x,
+    cfg: ModelConfig,
+    *,
+    positions=None,
+    mask=None,
+    cache=None,
+    cache_index=None,
+    kv_override=None,
+    use_rope=True,
+    chunked_info=None,
+):
+    """Unified attention:
+
+    * training / prefill: full sequence, ``mask`` (B,1|H,S,T) or (1,1,S,S);
+      returns ``(out, new_cache)`` with new_cache=None unless ``cache`` given
+      as an empty buffer to fill (prefill).
+    * decode: ``x`` is (B,1,d), ``cache=(k_buf, v_buf)`` ring/linear buffers,
+      ``cache_index`` the write position.
+    * cross-attention: pass ``kv_override=(k, v)`` precomputed from the
+      encoder (whisper) — cache-free.
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    n_rep = h // kvh
+    B, S, _ = x.shape
+
+    q = _split_heads(x @ params["wq"], h, hd)
+    if kv_override is not None:
+        k, v = kv_override
+        new_cache = None
+        if positions is not None and use_rope and cfg.positional == "rope":
+            q = rope(q, positions, cfg.rope_theta)
+    else:
+        k = _split_heads(x @ params["wk"], kvh, hd)
+        v = _split_heads(x @ params["wv"], kvh, hd)
+        if use_rope and cfg.positional == "rope":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if cache is not None and cache_index is not None:
+            # decode: write this step's k/v into the buffer
+            k_buf, v_buf = cache
+            slot = cache_index % k_buf.shape[1] if cfg.sliding_window else cache_index
+            k_buf = jax.lax.dynamic_update_slice_in_dim(k_buf, k.astype(k_buf.dtype), slot, axis=1)
+            v_buf = jax.lax.dynamic_update_slice_in_dim(v_buf, v.astype(v_buf.dtype), slot, axis=1)
+            new_cache = (k_buf, v_buf)
+            k, v = k_buf, v_buf
+        elif cache is not None:
+            # prefill: return the filled buffer as the cache
+            new_cache = (k, v)
+        else:
+            new_cache = None
+
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    if chunked_info is not None and S > 1:
+        window, prefix = chunked_info
+        out = chunked_attention(q, k, v, window=window, prefix=prefix).astype(x.dtype)
+    else:
+        out = attention_scores(q, k, v, mask, x.dtype)
+    out = out.reshape(B, S, h * hd) @ params["wo"]
+    return out, new_cache
+
+
+def decode_mask(cache_len: int, pos, window: int | None):
+    """(1,1,1,T) mask for one decode step: valid cache slots only."""
+    t = jnp.arange(cache_len)
+    if window is None:
+        m = t <= pos
+    else:
+        # ring buffer of size `cache_len` == window: slots written so far and
+        # within the window.  After warmup every slot is valid.
+        m = (t < jnp.minimum(pos + 1, cache_len)) & jnp.ones((cache_len,), bool)
+    return m[None, None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(ks[0], (d, f)),
+            "w_up": _dense_init(ks[1], (d, f)),
+            "w_down": _dense_init(ks[2], (f, d)),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d, f)),
+        "w_down": _dense_init(ks[1], (f, d)),
+        "b_up": jnp.zeros((f,)),
+        "b_down": jnp.zeros((d,)),
+    }
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    if cfg.mlp_kind == "swiglu":
+        return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    if cfg.mlp_kind == "geglu":
+        return (jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+    return h @ params["w_down"] + params["b_down"]

@@ -1,0 +1,549 @@
+"""Public model API: ``build_model(cfg)`` returns a :class:`Model` with
+
+  init(key)                          -> params
+  forward(params, batch)             -> (logits, aux)        # full-seq training
+  loss(params, batch)                -> (scalar, metrics)
+  prefill(params, batch, cache_len)  -> (last_logits, cache)
+  decode_step(params, tokens, cache, pos) -> (logits, cache)
+
+``batch`` is a dict: tokens/targets (B,S) int32, plus stub modality inputs
+('frames' for whisper, 'patches' for VLM prefix) per the assigned carve-out.
+Layer stacks are scanned; the training path wraps each layer in
+``jax.checkpoint`` (rematerialisation) when ``remat=True``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import kvcache as KV
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.layers import causal_mask, decode_mask
+
+
+def _cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, tree)
+
+
+def cross_entropy(logits, targets, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+
+# sequences at/above this length use the chunked (flash-style) attention path
+# and never materialise an (S, S) mask or score matrix.
+CHUNK_THRESHOLD = 2048
+
+
+def _attn_ctx(cfg, seq, prefix=0):
+    """(mask, chunked_info) for causal self-attention over ``seq`` tokens."""
+    if seq >= CHUNK_THRESHOLD:
+        return None, (cfg.sliding_window, prefix)
+    return causal_mask(seq, cfg.sliding_window, prefix), None
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+# ---------------------------------------------------------------------------
+# decoder-only family (dense / moe / vlm prefix)
+
+
+def _build_decoder(cfg: ModelConfig, remat: bool = True) -> Model:
+    kinds = cfg.layer_kinds()
+    ff_kind = "moe" if kinds[0] == "attn_moe" else "mlp"
+    nl = cfg.num_layers
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "embed": T.init_embed(k1, cfg),
+            "layers": T._stacked(k2, nl, lambda k: T.init_attn_block(k, cfg, ff_kind)),
+        }
+        return _cast(p, dtype)
+
+    def _inputs(p, batch):
+        h = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+        prefix = 0
+        if cfg.prefix_tokens:
+            patches = batch["patches"].astype(h.dtype)  # stub embeddings (B,P,d)
+            h = jnp.concatenate([patches, h], axis=1)
+            prefix = cfg.prefix_tokens
+        bsz, seq, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(seq), (bsz, seq))
+        return h, positions, prefix
+
+    def forward(p, batch):
+        h, positions, prefix = _inputs(p, batch)
+        seq = h.shape[1]
+        mask, ci = _attn_ctx(cfg, seq, prefix if cfg.prefix_lm else 0)
+
+        def body(h, lp):
+            h, _, aux = T.attn_block(
+                lp, h, cfg, positions=positions, mask=mask, ff_kind=ff_kind,
+                chunked_info=ci,
+            )
+            return h, aux
+
+        if remat:
+            body = jax.checkpoint(body)
+        h, auxes = jax.lax.scan(body, h, p["layers"])
+        logits = T.lm_logits(p["embed"], h, cfg)
+        if prefix:
+            logits = logits[:, prefix:]
+        return logits, jnp.sum(auxes)
+
+    def loss(p, batch):
+        logits, aux = forward(p, batch)
+        ce = cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+        total = ce + cfg.router_aux_coef * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def init_cache(batch_size, cache_len):
+        return {
+            "kv": KV.init_kv(cfg, nl, batch_size, cache_len + (cfg.prefix_tokens or 0), dtype)
+        }
+
+    def prefill(p, batch, cache_len):
+        h, positions, prefix = _inputs(p, batch)
+        seq = h.shape[1]
+        mask, ci = _attn_ctx(cfg, seq, prefix if cfg.prefix_lm else 0)
+        buf_len = KV.kv_buffer_len(cfg, cache_len + prefix)
+
+        def body(h, lp):
+            h, kv, _ = T.attn_block(
+                lp, h, cfg, positions=positions, mask=mask, ff_kind=ff_kind, cache=(),
+                chunked_info=ci,
+            )
+            k, v = kv
+            # place the (last) seq keys into a buf_len buffer, ring-aligned
+            if seq >= buf_len:
+                k_l, v_l = k[:, -buf_len:], v[:, -buf_len:]
+                shift = (seq - buf_len) % buf_len
+                k_l = jnp.roll(k_l, shift, axis=1)
+                v_l = jnp.roll(v_l, shift, axis=1)
+            else:
+                pad = buf_len - seq
+                k_l = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v_l = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h, (k_l.astype(dtype), v_l.astype(dtype))
+
+        h, kvs = jax.lax.scan(body, h, p["layers"])
+        logits = T.lm_logits(p["embed"], h[:, -1:, :], cfg)
+        return logits, {"kv": {"k": kvs[0], "v": kvs[1]}}
+
+    def decode_step(p, tokens, cache, pos):
+        """tokens: (B,1); pos: scalar position of this token (0-based, counts
+        prefix for VLM)."""
+        h = T.embed_tokens(p["embed"], tokens, cfg)
+        bsz = h.shape[0]
+        positions = jnp.full((bsz, 1), pos, dtype=jnp.int32)
+        t = cache["kv"]["k"].shape[2]
+        mask = decode_mask(t, pos, cfg.sliding_window)
+
+        def body(h, xs):
+            lp, k_buf, v_buf = xs
+            h, kv, _ = T.attn_block(
+                lp,
+                h,
+                cfg,
+                positions=positions,
+                mask=mask,
+                ff_kind=ff_kind,
+                cache=(k_buf, v_buf),
+                cache_index=pos,
+            )
+            return h, kv
+
+        h, kvs = jax.lax.scan(body, h, (p["layers"], cache["kv"]["k"], cache["kv"]["v"]))
+        logits = T.lm_logits(p["embed"], h, cfg)
+        return logits, {"kv": {"k": kvs[0], "v": kvs[1]}}
+
+    return Model(cfg, init, forward, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# ssm family (mamba2)
+
+
+def _build_ssm(cfg: ModelConfig, remat: bool = True) -> Model:
+    nl = cfg.num_layers
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p = {
+            "embed": T.init_embed(k1, cfg),
+            "layers": T._stacked(k2, nl, lambda k: T.init_mamba_block(k, cfg)),
+        }
+        return _cast(p, dtype)
+
+    def _scan_layers(p, h, collect_state=False):
+        def body(h, lp):
+            h, state = T.mamba_block(lp, h, cfg)
+            return h, state if collect_state else None
+
+        body_ = jax.checkpoint(body) if remat and not collect_state else body
+        return jax.lax.scan(body_, h, p["layers"])
+
+    def forward(p, batch):
+        h = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+        h, _ = _scan_layers(p, h)
+        return T.lm_logits(p["embed"], h, cfg), jnp.zeros((), jnp.float32)
+
+    def loss(p, batch):
+        logits, _ = forward(p, batch)
+        ce = cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def init_cache(batch_size, cache_len):
+        return {"ssm": KV.init_ssm(cfg, nl, batch_size)}
+
+    def prefill(p, batch, cache_len):
+        h = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+        h, states = _scan_layers(p, h, collect_state=True)
+        logits = T.lm_logits(p["embed"], h[:, -1:, :], cfg)
+        ssm_state, conv_state = states
+        return logits, {"ssm": {"state": ssm_state, "conv": conv_state}}
+
+    def decode_step(p, tokens, cache, pos):
+        h = T.embed_tokens(p["embed"], tokens, cfg)
+
+        def body(h, xs):
+            lp, st, cv = xs
+            h, (st2, cv2) = T.mamba_block_decode(lp, h, (st, cv), cfg)
+            return h, (st2, cv2)
+
+        h, (st, cv) = jax.lax.scan(
+            body, h, (p["layers"], cache["ssm"]["state"], cache["ssm"]["conv"])
+        )
+        logits = T.lm_logits(p["embed"], h, cfg)
+        return logits, {"ssm": {"state": st, "conv": cv}}
+
+    return Model(cfg, init, forward, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# hybrid family (zamba2: mamba backbone + shared attention block)
+
+
+def _build_hybrid(cfg: ModelConfig, remat: bool = True) -> Model:
+    every = cfg.shared_attn_every
+    assert every >= 2 and cfg.num_layers % every == 0
+    n_cycles = cfg.num_layers // every
+    per_cycle = every - 1  # mamba layers per cycle; last slot = shared attn
+    n_mamba = n_cycles * per_cycle
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": T.init_embed(k1, cfg),
+            "mamba": T._stacked(k2, n_mamba, lambda k: T.init_mamba_block(k, cfg)),
+            "shared_attn": T.init_attn_block(k3, cfg, "mlp"),
+        }
+        return _cast(p, dtype)
+
+    def _reshape_cycles(tree):
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((n_cycles, per_cycle) + x.shape[1:]), tree
+        )
+
+    def forward(p, batch):
+        h = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+        bsz, seq, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(seq), (bsz, seq))
+        mask, ci = _attn_ctx(cfg, seq)
+        shared = p["shared_attn"]
+
+        def mamba_body(h, lp):
+            h, _ = T.mamba_block(lp, h, cfg)
+            return h, None
+
+        mb = jax.checkpoint(mamba_body) if remat else mamba_body
+
+        def cycle(h, cyc_params):
+            h, _ = jax.lax.scan(mb, h, cyc_params)
+            h, _, _ = T.attn_block(
+                shared, h, cfg, positions=positions, mask=mask, ff_kind="mlp",
+                chunked_info=ci,
+            )
+            return h, None
+
+        cyc = jax.checkpoint(cycle) if remat else cycle
+        h, _ = jax.lax.scan(cyc, h, _reshape_cycles(p["mamba"]))
+        return T.lm_logits(p["embed"], h, cfg), jnp.zeros((), jnp.float32)
+
+    def loss(p, batch):
+        logits, _ = forward(p, batch)
+        ce = cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def init_cache(batch_size, cache_len):
+        return {
+            "ssm": KV.init_ssm(cfg, n_mamba, batch_size),
+            "kv": KV.init_kv(cfg, n_cycles, batch_size, cache_len, dtype),
+        }
+
+    def prefill(p, batch, cache_len):
+        h = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+        bsz, seq, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(seq), (bsz, seq))
+        mask, ci = _attn_ctx(cfg, seq)
+        shared = p["shared_attn"]
+        buf_len = KV.kv_buffer_len(cfg, cache_len)
+
+        def cycle(h, cyc_params):
+            def mb(h, lp):
+                h, st = T.mamba_block(lp, h, cfg)
+                return h, st
+
+            h, sts = jax.lax.scan(mb, h, cyc_params)
+            h, kv, _ = T.attn_block(
+                shared, h, cfg, positions=positions, mask=mask, ff_kind="mlp", cache=(),
+                chunked_info=ci,
+            )
+            k, v = kv
+            if seq >= buf_len:
+                shift = (seq - buf_len) % buf_len
+                k = jnp.roll(k[:, -buf_len:], shift, axis=1)
+                v = jnp.roll(v[:, -buf_len:], shift, axis=1)
+            else:
+                pad = buf_len - seq
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h, (sts, (k.astype(dtype), v.astype(dtype)))
+
+        h, (sts, kvs) = jax.lax.scan(cycle, h, _reshape_cycles(p["mamba"]))
+        ssm_state, conv_state = sts
+        flat = lambda x: x.reshape((n_mamba,) + x.shape[2:])
+        logits = T.lm_logits(p["embed"], h[:, -1:, :], cfg)
+        return logits, {
+            "ssm": {"state": flat(ssm_state), "conv": flat(conv_state)},
+            "kv": {"k": kvs[0], "v": kvs[1]},
+        }
+
+    def decode_step(p, tokens, cache, pos):
+        h = T.embed_tokens(p["embed"], tokens, cfg)
+        bsz = h.shape[0]
+        positions = jnp.full((bsz, 1), pos, dtype=jnp.int32)
+        t = cache["kv"]["k"].shape[2]
+        mask = decode_mask(t, pos, cfg.sliding_window)
+        shared = p["shared_attn"]
+
+        def cycle(h, xs):
+            cyc_params, st, cv, k_buf, v_buf = xs
+
+            def mb(h, inner):
+                lp, s, c = inner
+                h, (s2, c2) = T.mamba_block_decode(lp, h, (s, c), cfg)
+                return h, (s2, c2)
+
+            h, (st2, cv2) = jax.lax.scan(mb, h, (cyc_params, st, cv))
+            h, kv, _ = T.attn_block(
+                shared,
+                h,
+                cfg,
+                positions=positions,
+                mask=mask,
+                ff_kind="mlp",
+                cache=(k_buf, v_buf),
+                cache_index=pos,
+            )
+            return h, (st2, cv2, kv[0], kv[1])
+
+        resh = lambda x: x.reshape((n_cycles, per_cycle) + x.shape[1:])
+        h, (st, cv, ks, vs) = jax.lax.scan(
+            cycle,
+            h,
+            (
+                _reshape_cycles(p["mamba"]),
+                resh(cache["ssm"]["state"]),
+                resh(cache["ssm"]["conv"]),
+                cache["kv"]["k"],
+                cache["kv"]["v"],
+            ),
+        )
+        flat = lambda x: x.reshape((n_mamba,) + x.shape[2:])
+        logits = T.lm_logits(p["embed"], h, cfg)
+        return logits, {
+            "ssm": {"state": flat(st), "conv": flat(cv)},
+            "kv": {"k": ks, "v": vs},
+        }
+
+    return Model(cfg, init, forward, loss, prefill, decode_step, init_cache)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder family (whisper)
+
+
+def _build_encdec(cfg: ModelConfig, remat: bool = True) -> Model:
+    nl, ne = cfg.num_layers, cfg.encoder_layers
+    dtype = jnp.dtype(cfg.dtype)
+    from repro.models.layers import apply_norm, init_norm
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": T.init_embed(k1, cfg),
+            "enc_layers": T._stacked(k2, ne, lambda k: T.init_attn_block(k, cfg, "mlp")),
+            "dec_layers": T._stacked(
+                k3, nl, lambda k: T.init_attn_block(k, cfg, "mlp", cross=True)
+            ),
+            "enc_final_norm": init_norm(cfg, cfg.d_model),
+        }
+        return _cast(p, dtype)
+
+    def encode(p, frames):
+        """frames: (B, enc_seq, d) stub embeddings (conv frontend carve-out)."""
+        bsz, es, _ = frames.shape
+        h = frames.astype(dtype) + T.sinusoidal_positions(es, cfg.d_model).astype(dtype)
+        positions = jnp.broadcast_to(jnp.arange(es), (bsz, es))
+        mask = jnp.ones((1, 1, es, es), bool)  # bidirectional
+
+        def body(h, lp):
+            h, _, _ = T.attn_block(lp, h, cfg, positions=positions, mask=mask, ff_kind="mlp")
+            return h, None
+
+        b = jax.checkpoint(body) if remat else body
+        h, _ = jax.lax.scan(b, h, p["enc_layers"])
+        return apply_norm(p["enc_final_norm"], h, cfg)
+
+    def _cross_kv(p, enc_out):
+        """Per-decoder-layer cross K/V from encoder output: (L, B, ES, kvh, hd)."""
+
+        def one(lp):
+            xp = lp["xattn"]
+            b, es, _ = enc_out.shape
+            k = (enc_out @ xp["wk"]).reshape(b, es, cfg.num_kv_heads, cfg.resolved_head_dim)
+            v = (enc_out @ xp["wv"]).reshape(b, es, cfg.num_kv_heads, cfg.resolved_head_dim)
+            return k, v
+
+        return jax.vmap(one)(p["dec_layers"])
+
+    def _dec_inputs(p, tokens):
+        h = T.embed_tokens(p["embed"], tokens, cfg)
+        seq = h.shape[1]
+        h = h + T.sinusoidal_positions(seq, cfg.d_model).astype(h.dtype)
+        positions = jnp.broadcast_to(jnp.arange(seq), (h.shape[0], seq))
+        return h, positions
+
+    def _run_decoder(p, h, positions, mask, ck, cv, cmask, mode, kv=None, pos=None,
+                     chunked_info=None):
+        """mode: 'train' | 'prefill' | 'decode'."""
+
+        def body(h, xs):
+            if mode == "decode":
+                lp, k1, v1, kb, vb = xs
+                h, kvout, _ = T.attn_block(
+                    lp, h, cfg, positions=positions, mask=mask, ff_kind="mlp",
+                    cache=(kb, vb), cache_index=pos, cross_kv=(k1, v1), cross_mask=cmask,
+                )
+                return h, kvout
+            lp, k1, v1 = xs
+            h, kvout, _ = T.attn_block(
+                lp, h, cfg, positions=positions, mask=mask, ff_kind="mlp",
+                cache=() if mode == "prefill" else None,
+                cross_kv=(k1, v1), cross_mask=cmask, chunked_info=chunked_info,
+            )
+            return h, kvout if mode == "prefill" else None
+
+        if mode == "decode":
+            return jax.lax.scan(body, h, (p["dec_layers"], ck, cv, kv["k"], kv["v"]))
+        b = jax.checkpoint(body) if (remat and mode == "train") else body
+        return jax.lax.scan(b, h, (p["dec_layers"], ck, cv))
+
+    def forward(p, batch):
+        enc_out = encode(p, batch["frames"])
+        ck, cv = _cross_kv(p, enc_out)
+        h, positions = _dec_inputs(p, batch["tokens"])
+        seq = h.shape[1]
+        mask, ci = _attn_ctx(cfg, seq)
+        cmask = jnp.ones((1, 1, seq, enc_out.shape[1]), bool)
+        h, _ = _run_decoder(p, h, positions, mask, ck, cv, cmask, "train", chunked_info=ci)
+        return T.lm_logits(p["embed"], h, cfg), jnp.zeros((), jnp.float32)
+
+    def loss(p, batch):
+        logits, _ = forward(p, batch)
+        ce = cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def init_cache(batch_size, cache_len):
+        c = {"kv": KV.init_kv(cfg, nl, batch_size, cache_len, dtype)}
+        shape = (nl, batch_size, cfg.encoder_seq, cfg.num_kv_heads, cfg.resolved_head_dim)
+        c["cross"] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        return c
+
+    def prefill(p, batch, cache_len):
+        enc_out = encode(p, batch["frames"])
+        ck, cv = _cross_kv(p, enc_out)
+        h, positions = _dec_inputs(p, batch["tokens"])
+        seq = h.shape[1]
+        mask, ci = _attn_ctx(cfg, seq)
+        cmask = jnp.ones((1, 1, seq, enc_out.shape[1]), bool)
+        h, kvs = _run_decoder(p, h, positions, mask, ck, cv, cmask, "prefill", chunked_info=ci)
+        k, v = kvs
+        pad = cache_len - seq
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        logits = T.lm_logits(p["embed"], h[:, -1:, :], cfg)
+        return logits, {
+            "kv": {"k": k.astype(dtype), "v": v.astype(dtype)},
+            "cross": {"k": ck.astype(dtype), "v": cv.astype(dtype)},
+        }
+
+    def decode_step(p, tokens, cache, pos):
+        h = T.embed_tokens(p["embed"], tokens, cfg)
+        bsz = h.shape[0]
+        t = cache["kv"]["k"].shape[2]
+        h = h + jax.lax.dynamic_slice_in_dim(
+            T.sinusoidal_positions(t, cfg.d_model), pos, 1, axis=0
+        ).astype(h.dtype)[None]
+        positions = jnp.full((bsz, 1), pos, dtype=jnp.int32)
+        mask = decode_mask(t, pos, None)
+        cmask = jnp.ones((1, 1, 1, cfg.encoder_seq), bool)
+        h, kvs = _run_decoder(
+            p, h, positions, mask, cache["cross"]["k"], cache["cross"]["v"], cmask,
+            "decode", kv=cache["kv"], pos=pos,
+        )
+        logits = T.lm_logits(p["embed"], h, cfg)
+        return logits, {"kv": {"k": kvs[0], "v": kvs[1]}, "cross": cache["cross"]}
+
+    return Model(cfg, init, forward, loss, prefill, decode_step, init_cache)
+
+
+def build_model(cfg: ModelConfig, remat: bool = True) -> Model:
+    kinds = set(cfg.layer_kinds())
+    if cfg.encoder_layers:
+        return _build_encdec(cfg, remat)
+    if kinds == {"mamba2"}:
+        return _build_ssm(cfg, remat)
+    if "mamba2" in kinds:
+        return _build_hybrid(cfg, remat)
+    return _build_decoder(cfg, remat)

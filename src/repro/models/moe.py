@@ -1,0 +1,129 @@
+"""Mixture-of-Experts feed-forward with GShard-style grouped einsum dispatch.
+
+Design notes (TPU adaptation):
+* Tokens are reshaped into groups of ``moe_group_size`` so the dispatch /
+  combine one-hots stay ``(G, Tg, E, C)`` with small ``C`` — every op is an
+  einsum, which GSPMD partitions cleanly (group axis follows the token/batch
+  sharding, expert & d_ff axes follow the ``'model'`` axis).  No scatter, no
+  ragged ops, identical semantics on CPU and TPU.
+* Capacity ``C = ceil(Tg * k / E * capacity_factor)``; overflowing tokens are
+  dropped (their expert output is 0) — the standard GShard/Switch trade-off.
+  Smoke tests use capacity_factor large enough to be dropless.
+* Top-k routing uses iterative argmax (k is 1 or 2 here) with per-slot
+  position assignment so slot-2 tokens respect remaining capacity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, e)),
+        "w_gate": _dense_init(ks[1], (e, d, f), in_axis=1),
+        "w_up": _dense_init(ks[2], (e, d, f), in_axis=1),
+        "w_down": _dense_init(ks[3], (e, f, d), in_axis=1),
+    }
+
+
+def _capacity(cfg: ModelConfig, tg: int) -> int:
+    e, k = cfg.num_experts, cfg.num_experts_per_token
+    c = int(tg * k / e * cfg.moe_capacity_factor) + 1
+    return max(4, min(c, tg))
+
+
+def route(logits, cfg: ModelConfig):
+    """Top-k routing with capacity.  logits: (G, Tg, E).
+
+    Returns (dispatch (G,Tg,E,C) bool, combine (G,Tg,E,C) f32, aux_loss)."""
+    g, tg, e = logits.shape
+    k = cfg.num_experts_per_token
+    c = _capacity(cfg, tg)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    remaining = probs
+    counts = jnp.zeros((g, e), jnp.int32)
+    dispatch = jnp.zeros((g, tg, e, c), bool)
+    combine = jnp.zeros((g, tg, e, c), jnp.float32)
+    gates_sum = jnp.zeros((g, tg), jnp.float32)
+    frac_routed = jnp.zeros((g, e), jnp.float32)
+
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (G,Tg)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # (G,Tg,E)
+        frac_routed = frac_routed + jnp.mean(onehot, axis=1)
+        # position of each token within its expert for this slot
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        pos_tok = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (G,Tg)
+        keep = pos_tok < c
+        counts = counts + jnp.sum(onehot, axis=1).astype(jnp.int32)
+        gate = jnp.sum(probs * onehot, axis=-1)                  # (G,Tg)
+        slot = jax.nn.one_hot(jnp.where(keep, pos_tok, c), c + 1, dtype=jnp.float32)[..., :c]
+        d_k = onehot[..., None] * slot[:, :, None, :]            # (G,Tg,E,C)
+        dispatch = dispatch | (d_k > 0)
+        combine = combine + gate[..., None, None] * d_k
+        gates_sum = gates_sum + jnp.where(keep, gate, 0.0)
+        remaining = remaining * (1.0 - onehot)
+
+    # renormalise combine weights over the k selected experts (mixtral-style);
+    # top-1 keeps the raw gate probability (switch-style) so the router still
+    # receives gradient.
+    if k > 1:
+        denom = jnp.maximum(gates_sum, 1e-9)[..., None, None]
+        combine = combine / denom
+
+    # switch-style load balance aux loss
+    mean_probs = jnp.mean(probs, axis=1)                         # (G,E)
+    aux = e * jnp.mean(jnp.sum(frac_routed / k * mean_probs, axis=-1))
+    return dispatch, combine, aux
+
+
+def apply_moe(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d), plus aux loss."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    tg = min(cfg.moe_group_size, tokens.shape[0])
+    # pad to a multiple of the group size
+    t = tokens.shape[0]
+    g = -(-t // tg)
+    pad = g * tg - t
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    grouped = tokens.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", grouped, params["router"])
+    dispatch, combine, aux = route(logits, cfg)
+
+    def _ep(x, spec_dims):
+        """Expert-parallel sharding constraint (no-op unless cfg.moe_ep_axis)."""
+        if cfg.moe_ep_axis is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*spec_dims))
+
+    ep, mp = cfg.moe_ep_axis, "model"
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(grouped.dtype), grouped)
+    xe = _ep(xe, (None, ep, None, None))
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, params["w_up"]))
+    h = _ep(h, (None, ep, None, mp))
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    ye = _ep(ye, (None, ep, None, None))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(ye.dtype), ye)
+
+    out = out.reshape(g * tg, d)
+    if pad:
+        out = out[:t]
+    return out.reshape(b, s, d), aux

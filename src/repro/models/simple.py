@@ -1,0 +1,95 @@
+"""Small models for the paper-faithful benchmarks (the paper trains a CNN on
+FEMNIST and a 2-layer GRU on Shakespeare; here: an MLP classifier over the
+synthetic image features and a 2-layer GRU char-LM, both pure JAX)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import cross_entropy
+
+
+def mlp_classifier(input_dim: int, num_classes: int, hidden: int = 128):
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        s1, s2 = 1 / jnp.sqrt(input_dim), 1 / jnp.sqrt(hidden)
+        return {
+            "w1": jax.random.normal(k1, (input_dim, hidden)) * s1,
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, hidden)) * s2,
+            "b2": jnp.zeros((hidden,)),
+            "w3": jax.random.normal(k3, (hidden, num_classes)) * s2,
+            "b3": jnp.zeros((num_classes,)),
+        }
+
+    def logits_fn(p, x):
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        h = jax.nn.relu(h @ p["w2"] + p["b2"])
+        return h @ p["w3"] + p["b3"]
+
+    def loss(p, batch):
+        logits = logits_fn(p, batch["x"])
+        ce = cross_entropy(logits, batch["y"])
+        return ce, {"ce": ce}
+
+    def accuracy(p, batch):
+        return jnp.mean(jnp.argmax(logits_fn(p, batch["x"]), -1) == batch["y"])
+
+    return init, loss, accuracy
+
+
+def gru_lm(vocab: int, hidden: int = 256, layers: int = 2, embed: int = 64):
+    """2-layer GRU next-char model (the paper's Shakespeare architecture)."""
+
+    def _gru_init(key, in_dim, h):
+        ks = jax.random.split(key, 3)
+        s = 1 / jnp.sqrt(in_dim + h)
+        return {
+            "wx": jax.random.normal(ks[0], (in_dim, 3 * h)) * s,
+            "wh": jax.random.normal(ks[1], (h, 3 * h)) * s,
+            "b": jnp.zeros((3 * h,)),
+        }
+
+    def init(key):
+        ks = jax.random.split(key, layers + 2)
+        p = {
+            "embed": jax.random.normal(ks[0], (vocab, embed)) * 0.05,
+            "out": jax.random.normal(ks[1], (hidden, vocab)) / jnp.sqrt(hidden),
+            "out_b": jnp.zeros((vocab,)),
+        }
+        for i in range(layers):
+            p[f"gru{i}"] = _gru_init(ks[2 + i], embed if i == 0 else hidden, hidden)
+        return p
+
+    def _gru_layer(p, xs, h0):
+        def step(h, x):
+            gx = x @ p["wx"] + p["b"]
+            gh = h @ p["wh"]
+            r = jax.nn.sigmoid(gx[..., :h.shape[-1]] + gh[..., :h.shape[-1]])
+            z = jax.nn.sigmoid(
+                gx[..., h.shape[-1] : 2 * h.shape[-1]] + gh[..., h.shape[-1] : 2 * h.shape[-1]]
+            )
+            n = jnp.tanh(gx[..., 2 * h.shape[-1] :] + r * gh[..., 2 * h.shape[-1] :])
+            h = (1 - z) * n + z * h
+            return h, h
+
+        _, hs = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))
+        return jnp.swapaxes(hs, 0, 1)
+
+    def logits_fn(p, tokens):
+        b = tokens.shape[0]
+        h = jnp.take(p["embed"], tokens, axis=0)
+        for i in range(layers):
+            h = _gru_layer(p[f"gru{i}"], h, jnp.zeros((b, hidden)))
+        return h @ p["out"] + p["out_b"]
+
+    def loss(p, batch):
+        ce = cross_entropy(logits_fn(p, batch["tokens"]), batch["targets"])
+        return ce, {"ce": ce}
+
+    def accuracy(p, batch):
+        logits = logits_fn(p, batch["tokens"])
+        return jnp.mean(jnp.argmax(logits, -1) == batch["targets"])
+
+    return init, loss, accuracy

@@ -1,0 +1,144 @@
+"""Model families built from the shared blocks, with lax.scan over stacked
+layer parameters so compile time is depth-independent (critical: full configs
+are up to 54 layers / 790B params and are compiled for a 512-device mesh on a
+single-core CPU container).
+
+Families
+--------
+* ``decoder``  — dense / MoE / VLM-prefix decoder-only LMs (8 of 10 archs)
+* ``encdec``   — whisper: encoder over stub frame embeddings + cross-attn decoder
+* ``ssm``      — mamba2: attention-free SSD stack
+* ``hybrid``   — zamba2: mamba2 backbone + one weight-shared attention block
+                 applied every ``shared_attn_every`` layers (9 call sites)
+
+All functions are pure; caches are explicit pytrees (see ``kvcache.py``).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import (
+    apply_attention,
+    apply_mlp,
+    apply_norm,
+    causal_mask,
+    decode_mask,
+    init_attention,
+    init_mlp,
+    init_norm,
+    sinusoidal_positions,
+)
+
+
+def _stacked(key, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# layer bodies (single layer; scanned over stacked params)
+
+
+def init_attn_block(key, cfg: ModelConfig, ff_kind: str, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "norm1": init_norm(cfg, cfg.d_model),
+        "attn": init_attention(ks[0], cfg),
+        "norm2": init_norm(cfg, cfg.d_model),
+    }
+    p["ff"] = M.init_moe(ks[1], cfg) if ff_kind == "moe" else init_mlp(ks[1], cfg)
+    if cross:
+        p["norm_x"] = init_norm(cfg, cfg.d_model)
+        p["xattn"] = init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def attn_block(
+    p,
+    h,
+    cfg: ModelConfig,
+    *,
+    positions,
+    mask,
+    ff_kind: str,
+    cache=None,
+    cache_index=None,
+    cross_kv=None,
+    cross_mask=None,
+    chunked_info=None,
+):
+    a, new_cache = apply_attention(
+        p["attn"],
+        apply_norm(p["norm1"], h, cfg),
+        cfg,
+        positions=positions,
+        mask=mask,
+        cache=cache,
+        cache_index=cache_index,
+        chunked_info=chunked_info,
+    )
+    h = h + a
+    if cross_kv is not None:
+        xa, _ = apply_attention(
+            p["xattn"],
+            apply_norm(p["norm_x"], h, cfg),
+            cfg,
+            positions=positions,
+            mask=cross_mask,
+            kv_override=cross_kv,
+            use_rope=False,
+        )
+        h = h + xa
+    hn = apply_norm(p["norm2"], h, cfg)
+    if ff_kind == "moe":
+        f, aux = M.apply_moe(p["ff"], hn, cfg)
+    else:
+        f, aux = apply_mlp(p["ff"], hn, cfg), jnp.zeros((), jnp.float32)
+    return h + f, new_cache, aux
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    return {"norm": init_norm(cfg, cfg.d_model), "mamba": S.init_mamba2(key, cfg)}
+
+
+def mamba_block(p, h, cfg: ModelConfig):
+    y, state = S.apply_mamba2(p["mamba"], apply_norm(p["norm"], h, cfg), cfg)
+    return h + y, state
+
+
+def mamba_block_decode(p, h, state, cfg: ModelConfig):
+    y, new_state = S.decode_mamba2(p["mamba"], apply_norm(p["norm"], h, cfg), state, cfg)
+    return h + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+
+
+def init_embed(key, cfg: ModelConfig):
+    p = {"embedding": jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02}
+    p["final_norm"] = init_norm(cfg, cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._dense_init(jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    h = jnp.take(p["embedding"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.scale_embeddings:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def lm_logits(p, h, cfg: ModelConfig):
+    h = apply_norm(p["final_norm"], h, cfg)
+    w = p["lm_head"] if not cfg.tie_embeddings else p["embedding"].T.astype(h.dtype)
+    return h @ w

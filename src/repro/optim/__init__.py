@@ -1,0 +1,2 @@
+from repro.optim.optim import Optimizer, adam, sgd  # noqa: F401
+from repro.optim.schedules import constant, cosine, inverse_decay  # noqa: F401

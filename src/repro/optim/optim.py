@@ -1,0 +1,69 @@
+"""Minimal functional optimizers (the paper uses vanilla SGD on both the
+clients and the master; Adam provided for completeness/extensions)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (new_params, state)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype), params, grads
+            )
+            return new, state
+        vel = jax.tree_util.tree_map(lambda v, g: momentum * v + g, state, grads)
+        new = jax.tree_util.tree_map(
+            lambda p, v: (p - lr * v.astype(p.dtype)).astype(p.dtype), params, vel
+        )
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m_, v_: (p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)).astype(
+                p.dtype
+            ),
+            params,
+            m,
+            v,
+        )
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,5 @@
+import os
+
+# Tests run on the single real CPU device.  The dry-run (and only it) forces
+# 512 host devices in its own process; test_dryrun launches subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

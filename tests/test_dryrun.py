@@ -1,0 +1,69 @@
+"""Dry-run path test: the real dryrun.py machinery on a small forced-device
+mesh in a subprocess (the 512-device production sweep runs via
+`python -m repro.launch.dryrun --all`; artifacts are checked here if present)."""
+
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_dryrun_small_mesh_subprocess():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import ARCHS, SHAPES
+from repro.launch import dryrun as D
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = ARCHS["llama3-8b"].reduced().with_(vocab_size=256)
+shape = SHAPES["train_4k"]
+import dataclasses
+shape = dataclasses.replace(shape, seq_len=64, global_batch=8)
+import repro.launch.specs as SP
+fl = SP.fl_config_for(cfg, shape, n_clients=4)
+orig = SP.fl_config_for
+SP.fl_config_for = lambda *a, **k: fl
+lowered = D.build_lowered(cfg, shape, mesh)
+compiled = lowered.compile()
+cost = compiled.cost_analysis()
+assert (cost[0] if isinstance(cost, list) else cost).get("flops", 0) > 0
+from repro.launch.roofline import parse_collectives
+st = parse_collectives(compiled.as_text())
+assert st.total_traffic() > 0, "expected cross-client/TP collectives"
+print("SMALL-MESH-DRYRUN-OK", st.counts)
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert "SMALL-MESH-DRYRUN-OK" in out.stdout, out.stdout + out.stderr
+
+
+@pytest.mark.parametrize("mesh_name", ["pod1", "pod2"])
+def test_production_artifacts_if_present(mesh_name):
+    """Validates the 40-pair artifact sets produced by the production sweep."""
+    d = os.path.join(ROOT, "benchmarks", "artifacts", "dryrun", mesh_name)
+    files = glob.glob(os.path.join(d, "*.json"))
+    if len(files) < 40:
+        pytest.skip(f"production sweep artifacts not present for {mesh_name}")
+    n_ok, n_skip = 0, 0
+    for f in files:
+        rec = json.load(open(f))
+        if "skipped" in rec:
+            n_skip += 1
+            continue
+        n_ok += 1
+        assert rec["flops_per_chip"] > 0
+        assert rec["compute_s"] >= 0 and rec["memory_s"] > 0
+        assert rec["bottleneck"] in ("compute", "memory", "collective")
+    assert n_ok + n_skip >= 40
+    assert n_ok >= 34

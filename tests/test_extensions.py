@@ -1,0 +1,137 @@
+"""Beyond-paper extensions: OCS + unbiased compression (the paper's first
+future-work item), partial availability (Appendix E), two-pass OCS round."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import ocs
+from repro.core.compression import (
+    compress_update,
+    compressed_bits_per_update,
+    qsgd_leaf,
+    rand_k_leaf,
+)
+from repro.fl.round import client_weights, make_round
+
+
+def test_compressors_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (400,))
+    for fn, arg in ((rand_k_leaf, 0.25), (qsgd_leaf, 8)):
+        acc = jnp.zeros_like(x)
+        trials = 2000
+        for i in range(trials):
+            acc = acc + fn(x, arg, jax.random.fold_in(key, i))
+        mean = acc / trials
+        err = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
+        assert err < 0.1, (fn.__name__, err)
+
+
+def test_compressed_bits_much_smaller():
+    d = 1_000_000
+    assert compressed_bits_per_update(d, "randk", 0.05) < 0.1 * d * 32
+    assert compressed_bits_per_update(d, "qsgd", 4) < 0.15 * d * 32
+    assert compressed_bits_per_update(d, "none", 0) == d * 32
+
+
+def test_ocs_with_compression_unbiased_aggregate():
+    """OCS o randk: the composed estimator stays unbiased (orthogonality
+    claim, paper Sec. 1.2)."""
+    key = jax.random.PRNGKey(1)
+    n, d = 6, 64
+    upd = {"u": jax.random.normal(key, (n, d)) * jnp.array([1, 1, 1, 1, 1, 10.0])[:, None]}
+    w = jnp.full((n,), 1 / n)
+    full = jax.tree_util.tree_map(lambda x: (x * w[:, None]).sum(0), upd)
+
+    def one(k):
+        kc, ks = jax.random.split(k)
+        comp = jax.vmap(lambda u, kk: compress_update(u, kk, "randk", 0.5))(
+            upd, jax.random.split(kc, n)
+        )
+        return ocs.sample_and_aggregate(comp, w, 3, ks, sampler="optimal").aggregate
+
+    fn = jax.jit(one)
+    acc = None
+    trials = 4000
+    for i in range(trials):
+        g = fn(jax.random.fold_in(key, i))
+        acc = g if acc is None else jax.tree_util.tree_map(jnp.add, acc, g)
+    mean = jax.tree_util.tree_map(lambda x: x / trials, acc)
+    scale = float(jnp.abs(full["u"]).max())
+    np.testing.assert_allclose(
+        np.asarray(mean["u"]), np.asarray(full["u"]), atol=0.2 * scale
+    )
+
+
+def test_partial_availability_unbiased():
+    """Appendix E: with availability q < 1 and 1/(q p) scaling the aggregate
+    stays unbiased over both the availability and sampling draws."""
+    key = jax.random.PRNGKey(2)
+    n, d = 6, 32
+    upd = {"u": jax.random.normal(key, (n, d))}
+    w = jnp.full((n,), 1 / n)
+    full = jax.tree_util.tree_map(lambda x: (x * w[:, None]).sum(0), upd)
+    fn = jax.jit(
+        lambda k: ocs.sample_and_aggregate(
+            upd, w, 3, k, sampler="optimal", availability=0.7
+        ).aggregate
+    )
+    acc = None
+    trials = 6000
+    for i in range(trials):
+        g = fn(jax.random.fold_in(key, i))
+        acc = g if acc is None else jax.tree_util.tree_map(jnp.add, acc, g)
+    mean = jax.tree_util.tree_map(lambda x: x / trials, acc)
+    scale = float(jnp.abs(full["u"]).max())
+    np.testing.assert_allclose(
+        np.asarray(mean["u"]), np.asarray(full["u"]), atol=0.25 * scale
+    )
+
+
+def test_round_with_compression_trains():
+    from repro.models.simple import mlp_classifier
+
+    init, loss, _ = mlp_classifier(16, 4, hidden=16)
+    fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
+                  lr_local=0.1, compression="randk", compression_param=0.5)
+    params = init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, 2, 8, 16)).astype("float32")
+    y = rng.integers(0, 4, (8, 2, 8)).astype("int32")
+    batch = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    step = jax.jit(make_round(loss, fl))
+    key = jax.random.PRNGKey(1)
+    l0 = None
+    for k in range(40):
+        params, _, m = step(params, (), batch, client_weights(fl),
+                            jax.random.fold_in(key, k))
+        if l0 is None:
+            l0 = float(m.loss)
+    assert float(m.loss) < l0
+    assert bool(jnp.isfinite(m.loss))
+
+
+def test_two_pass_scan_equals_vmap():
+    from repro.models.simple import mlp_classifier
+
+    init, loss, _ = mlp_classifier(12, 3, hidden=8)
+    fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
+                  lr_local=0.1)
+    params = init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(8, 2, 4, 12)).astype("float32")),
+        "y": jnp.asarray(rng.integers(0, 3, (8, 2, 4)).astype("int32")),
+    }
+    w = client_weights(fl)
+    key = jax.random.PRNGKey(7)
+    p1, _, m1 = jax.jit(make_round(loss, fl))(params, (), batch, w, key)
+    p2, _, m2 = jax.jit(make_round(loss, fl, mode="scan", scan_group=4))(
+        params, (), batch, w, key
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert bool(jnp.all(m1.mask == m2.mask))

@@ -1,0 +1,173 @@
+"""Integration tests: full federated training on synthetic data reproduces
+the paper's qualitative claims, and the DSGD recursion obeys Theorem 13."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import improvement, ocs, sampling
+from repro.data import eval_split, femnist_like, quadratics
+from repro.fl.round import client_weights, make_round
+from repro.fl.trainer import run_training
+from repro.models.simple import mlp_classifier
+
+
+@pytest.fixture(scope="module")
+def femnist():
+    ds = femnist_like(dataset_id=1, n_clients=80, seed=0)
+    ev = {k: jnp.asarray(v) for k, v in eval_split(femnist_like, 512, dataset_id=1).items()}
+    return ds, ev
+
+
+def _run(ds, ev, sampler, lr, rounds=35, seed=1):
+    init, loss, acc = mlp_classifier(ds.input_dim, ds.num_classes, hidden=64)
+    fl = FLConfig(
+        n_clients=32, expected_clients=3, sampler=sampler, local_steps=8, lr_local=lr
+    )
+    params, hist = run_training(
+        ds, init, loss, fl, rounds=rounds, batch_size=20,
+        eval_fn=jax.jit(acc), eval_batch=ev, eval_every=rounds - 1, seed=seed,
+    )
+    return hist
+
+
+def test_ocs_close_to_full_and_beats_uniform(femnist):
+    """Paper Sec 5.4: OCS ~ full participation per round, >> uniform."""
+    ds, ev = femnist
+    h_full = _run(ds, ev, "full", 0.125)
+    h_ocs = _run(ds, ev, "aocs", 0.125)
+    h_uni = _run(ds, ev, "uniform", 0.03125)  # paper: uniform needs smaller lr
+    acc_full, acc_ocs, acc_uni = (h.acc[-1][1] for h in (h_full, h_ocs, h_uni))
+    assert acc_ocs >= acc_uni + 0.05
+    assert acc_ocs >= acc_full - 0.10
+    # and in uplink bits, OCS is far cheaper than full for the same rounds
+    assert h_ocs.bits[-1] < 0.2 * h_full.bits[-1]
+
+
+def test_gamma_admits_larger_stepsize():
+    """Paper claim (Thms 13/17): the admissible step size is
+    eta <= gamma^k / ((1+WM)L), and gamma_OCS >= gamma_uniform = m/n with
+    strict inequality whenever update norms are heterogeneous — so OCS's
+    theoretical step-size ceiling is strictly larger.  (The *empirical*
+    tuned-step-size gap from the paper's Sec. 5 is dataset-dependent; the
+    benchmark suite reports it, the theory is what we gate on.)"""
+    rng = np.random.default_rng(0)
+    n, m = 32, 3
+    for sigma in (0.5, 1.0, 2.0):
+        u = jnp.asarray(rng.lognormal(0, sigma, size=n).astype(np.float32))
+        _, gamma = improvement.improvement_factors(u, m)
+        assert float(gamma) > m / n + 1e-4
+    # homogeneous norms: no advantage, gamma == m/n (uniform is optimal)
+    _, gamma = improvement.improvement_factors(jnp.ones(n), m)
+    assert float(gamma) == pytest.approx(m / n, rel=1e-5)
+
+
+def test_alpha_more_favourable_on_unbalanced_data():
+    """Footnote 6: more unbalance -> smaller alpha (bigger OCS win)."""
+    alphas = {}
+    for did in (1, 3):
+        ds = femnist_like(dataset_id=did, n_clients=80, seed=0)
+        ev = None
+        init, loss, _ = mlp_classifier(ds.input_dim, ds.num_classes, hidden=32)
+        fl = FLConfig(n_clients=32, expected_clients=3, sampler="aocs", local_steps=8,
+                      lr_local=0.125)
+        _, hist = run_training(ds, init, loss, fl, rounds=15, batch_size=20, seed=2)
+        alphas[did] = float(np.mean(hist.alpha[5:]))
+    assert alphas[3] <= alphas[1] + 0.02
+
+
+def test_dsgd_contraction_theorem13():
+    """On a strongly-convex quadratic with exact gradients (M=0, sigma=0),
+    Theorem 13 predicts E||r^{k+1}||^2 <= (1-mu*eta)||r^k||^2 + eta^2*beta1/gamma.
+
+    The LHS expectation over the sampling is available in closed form
+    (Lemma 1 holds with equality for independent sampling):
+        E||r+||^2 = ||r - eta*gbar||^2 + eta^2 * Var(u, p)
+    so the bound can be checked deterministically along a descent trajectory."""
+    n, dim = 16, 8
+    a, c, x_star = quadratics(n_clients=n, dim=dim, hetero=1.0, seed=0)
+    a, c, x_star = jnp.asarray(a), jnp.asarray(c), jnp.asarray(x_star)
+    w = jnp.full((n,), 1.0 / n)
+    mu = float(np.linalg.eigvalsh(np.asarray(a).mean(0)).min())
+    L = max(float(np.linalg.eigvalsh(np.asarray(a)[i]).max()) for i in range(n))
+    m = 4
+    x = jnp.zeros(dim) + 2.0
+
+    def grads(x):
+        return jnp.einsum("nij,nj->ni", a, x[None, :] - c)
+
+    # beta1 (M=0, sigma=0): 2L sum_i w_i^2 Z_i, Z_i = f_i(x*) - f_i^* >= 0
+    z = 0.5 * jnp.einsum("ni,nij,nj->n", c - x_star, a, c - x_star)
+    beta1 = float(2 * L * jnp.sum(w**2 * z))
+
+    for k in range(60):
+        g = grads(x)
+        u = ocs.client_norms({"g": g}, w)
+        _, gamma = improvement.improvement_factors(u, m)
+        eta = float(gamma) / L
+        p = sampling.optimal_probabilities(u, m)
+        var = float(improvement.sampling_variance(u, p))  # Eq. 6, exact
+        gbar = jnp.sum(w[:, None] * g, axis=0)
+        x_mean = x - eta * gbar
+        lhs = float(jnp.sum((x_mean - x_star) ** 2)) + eta**2 * var
+        rhs = (1 - mu * eta) * float(jnp.sum((x - x_star) ** 2)) + eta**2 * (
+            beta1 / float(gamma)
+        )
+        assert lhs <= rhs * (1 + 1e-4) + 1e-8, (k, lhs, rhs)
+        x = x_mean  # follow the mean path
+
+
+def test_dsgd_with_decaying_stepsize_converges():
+    """DSGD + OCS with a decaying step size converges to x* (the constant-lr
+    variance floor vanishes as eta -> 0), matching Remark 14's claim that the
+    method optimises the original objective."""
+    n, dim = 16, 8
+    a, c, x_star = quadratics(n_clients=n, dim=dim, hetero=1.0, seed=0)
+    a, c, x_star = jnp.asarray(a), jnp.asarray(c), jnp.asarray(x_star)
+    w = jnp.full((n,), 1.0 / n)
+    key = jax.random.PRNGKey(1)
+    x = jnp.zeros(dim)
+    tail = []
+    for k in range(900):
+        g = jnp.einsum("nij,nj->ni", a, x[None, :] - c)
+        eta = 0.5 / (1 + 0.05 * k)
+        res = ocs.sample_and_aggregate(
+            {"g": g}, w, 4, jax.random.fold_in(key, k), sampler="optimal"
+        )
+        x = x - eta * res.aggregate["g"]
+        if k >= 750:
+            tail.append(x)
+    x_avg = jnp.mean(jnp.stack(tail), axis=0)  # Polyak tail averaging
+    err = float(jnp.linalg.norm(x_avg - x_star)) / float(jnp.linalg.norm(x_star))
+    assert err < 0.15, err
+
+
+def test_round_step_dsgd_mode():
+    """DSGD round (U_i = g_i) via make_round converges with staged step-size
+    decay (constant-lr partial participation has an O(eta * Var) floor)."""
+    n, dim = 8, 6
+    a, c, x_star = quadratics(n_clients=n, dim=dim, seed=1)
+    a, c = jnp.asarray(a), jnp.asarray(c)
+
+    def loss_fn(params, batch):
+        x = params["x"]
+        d = x[None, :] - batch["c"]
+        val = 0.5 * jnp.mean(jnp.einsum("bi,bij,bj->b", d, batch["a"], d))
+        return val, {}
+
+    params = {"x": jnp.zeros(dim)}
+    batch = {"a": a[:, None, None], "c": c[:, None, None]}  # (n, R=1, b=1, ...)
+    key = jax.random.PRNGKey(0)
+    k = 0
+    for lr in (0.3, 0.1, 0.03, 0.01):
+        fl = FLConfig(n_clients=n, expected_clients=3, sampler="optimal",
+                      algorithm="dsgd", local_steps=1, lr_global=lr)
+        step = jax.jit(make_round(loss_fn, fl))
+        for _ in range(120):
+            params, _, metrics = step(params, (), batch, client_weights(fl),
+                                      jax.random.fold_in(key, k))
+            k += 1
+    err = float(jnp.linalg.norm(params["x"] - jnp.asarray(x_star)))
+    assert err < 0.15 * float(jnp.linalg.norm(jnp.asarray(x_star)))

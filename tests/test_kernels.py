@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.client_norm import client_sqnorms_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+@pytest.mark.parametrize("clients", [1, 3, 8])
+@pytest.mark.parametrize("d,chunk", [(64, 16), (1000, 128), (4096, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_client_sqnorms_sweep(clients, d, chunk, dtype):
+    key = jax.random.PRNGKey(clients * d)
+    x = (jax.random.normal(key, (clients, d)) * 3).astype(dtype)
+    got = ops.client_sqnorms(x, chunk=chunk, interpret=True)
+    want = ref.client_sqnorms_ref(x)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol)
+
+
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (200, 64, 128), (257, 128, 64)])
+@pytest.mark.parametrize("d", [32, 64])
+@pytest.mark.parametrize("window,prefix", [(None, 0), (48, 0), (None, 40)])
+def test_flash_attention_sweep(s, bq, bk, d, window, prefix):
+    key = jax.random.PRNGKey(s + d)
+    q, k, v = [
+        jax.random.normal(jax.random.fold_in(key, i), (2, s, d), jnp.float32)
+        for i in range(3)
+    ]
+    got = flash_attention_pallas(
+        q, k, v, window=window, prefix=prefix, block_q=bq, block_k=bk, interpret=True
+    )
+    want = ref.flash_attention_ref(q, k, v, window=window, prefix=prefix)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(9)
+    q, k, v = [
+        (jax.random.normal(jax.random.fold_in(key, i), (2, 128, 64)) * 0.5).astype(
+            jnp.bfloat16
+        )
+        for i in range(3)
+    ]
+    got = flash_attention_pallas(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2
+    )
+
+
+def test_flash_matches_model_chunked_attention():
+    """The Pallas kernel and the portable XLA chunked path agree (same oracle)."""
+    from repro.models.layers import chunked_attention
+
+    key = jax.random.PRNGKey(11)
+    b, s, h, hd = 2, 160, 3, 32
+    q, k, v = [
+        jax.random.normal(jax.random.fold_in(key, i), (b, s, h, hd)) for i in range(3)
+    ]
+    xla = chunked_attention(q, k, v, window=64, block_q=64, block_k=64)
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    pallas = flash_attention_pallas(
+        qk, kk, vk, window=64, block_q=64, block_k=64, interpret=True
+    ).reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pallas), atol=3e-5)
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 16), (100, 16), (128, 64)])
+@pytest.mark.parametrize("p,n", [(16, 8), (32, 16)])
+def test_ssd_scan_sweep(s, chunk, p, n):
+    from repro.kernels.ref import ssd_scan_ref
+
+    key = jax.random.PRNGKey(s + p)
+    bh = 3
+    x = jax.random.normal(jax.random.fold_in(key, 0), (bh, s, p)) * 0.5
+    b = jax.random.normal(jax.random.fold_in(key, 1), (bh, s, n)) * 0.5
+    c = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, n)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (bh, s))) * 0.2
+    da = -dt * jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (bh, s)) * 0.1)
+    y, st = ops.ssd_scan(x, b, c, dt, da, chunk=chunk, interpret=True)
+    yr, sr = ssd_scan_ref(x, b, c, dt, da)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=2e-5)
+
+
+def test_ssd_kernel_matches_model_ssm():
+    """The Pallas SSD kernel reproduces the model's apply_mamba2 core math."""
+    from repro.configs import get
+    from repro.kernels.ref import ssd_scan_ref
+    from repro.models import ssm as S
+
+    cfg = get("mamba2-130m-reduced")
+    params = S.init_mamba2(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model)) * 0.1
+    # model forward
+    y_model, (state_model, _) = S.apply_mamba2(params, x, cfg)
+    # reproduce the SSD core with the oracle on the same intermediates
+    d_in, nheads, conv_dim = S.dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xbc_pre, dt = S._split(zxbcdt, cfg)
+    xbc = jax.nn.silu(S._causal_conv(xbc_pre, params["conv_w"], params["conv_b"]))
+    xs = xbc[..., :d_in].reshape(1, 32, nheads, cfg.ssm_head_dim)
+    bmat, cmat = xbc[..., d_in:d_in+cfg.ssm_state], xbc[..., d_in+cfg.ssm_state:]
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = dtp * a
+    # per-head layout (BH, S, ...)
+    xk = xs.transpose(0, 2, 1, 3).reshape(nheads, 32, cfg.ssm_head_dim)
+    bk = jnp.stack([bmat[0]] * nheads)  # single B/C group shared across heads
+    ck = jnp.stack([cmat[0]] * nheads)
+    dtk = dtp[0].T
+    dak = da[0].T
+    y_k, st_k = ops.ssd_scan(xk, bk, ck, dtk, dak, chunk=16, interpret=True)
+    yr, sr = ssd_scan_ref(xk, bk, ck, dtk, dak)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(yr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(sr), atol=2e-5)
+    # and the model's final state equals the kernel's (B=1: heads match)
+    np.testing.assert_allclose(
+        np.asarray(state_model[0]), np.asarray(st_k), atol=1e-4
+    )

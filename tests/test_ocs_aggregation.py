@@ -1,0 +1,93 @@
+"""Unbiasedness and variance-identity tests for the OCS aggregation layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import improvement, ocs, sampling
+
+
+def _updates(key, n=8, d=32, heavy=None):
+    u = jax.random.normal(key, (n, d))
+    if heavy is not None:
+        u = u * jnp.asarray(heavy).reshape(-1, 1)
+    return {"a": u[:, : d // 2], "b": u[:, d // 2 :]}
+
+
+def test_client_norms_tree():
+    key = jax.random.PRNGKey(0)
+    upd = _updates(key)
+    w = jnp.full((8,), 1 / 8)
+    norms = ocs.client_norms(upd, w)
+    flat = jnp.concatenate([upd["a"], upd["b"]], axis=1)
+    np.testing.assert_allclose(
+        np.asarray(norms), np.linalg.norm(np.asarray(flat), axis=1) / 8, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("sampler", ["optimal", "aocs", "uniform"])
+def test_aggregate_unbiased(sampler):
+    """E[G] = sum_i w_i U_i over the Bernoulli masks (paper Eq. 2)."""
+    key = jax.random.PRNGKey(1)
+    heavy = [1, 1, 1, 1, 1, 1, 1, 25.0]
+    upd = _updates(key, heavy=heavy)
+    w = jnp.full((8,), 1 / 8)
+    full = jax.tree_util.tree_map(lambda x: (x * w[:, None]).sum(0), upd)
+
+    agg_fn = jax.jit(
+        lambda k: ocs.sample_and_aggregate(upd, w, 3, k, sampler=sampler).aggregate
+    )
+    acc = None
+    trials = 4000
+    for i in range(trials):
+        g = agg_fn(jax.random.fold_in(key, i))
+        acc = g if acc is None else jax.tree_util.tree_map(jnp.add, acc, g)
+    mean = jax.tree_util.tree_map(lambda x: x / trials, acc)
+    for la, lb in zip(jax.tree_util.tree_leaves(mean), jax.tree_util.tree_leaves(full)):
+        scale = float(jnp.abs(lb).max())
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=0.15 * scale)
+
+
+def test_variance_identity_monte_carlo():
+    """Eq. 6: E||G - full||^2 == sum (1-p)/p ||w_i U_i||^2 for independent
+    sampling (exactness of Lemma 1 for independent samplings)."""
+    key = jax.random.PRNGKey(2)
+    upd = _updates(key, heavy=[1, 2, 3, 4, 5, 6, 7, 40.0])
+    w = jnp.full((8,), 1 / 8)
+    full = jax.tree_util.tree_map(lambda x: (x * w[:, None]).sum(0), upd)
+    u = ocs.client_norms(upd, w)
+    p = sampling.optimal_probabilities(u, 3)
+    predicted = float(improvement.sampling_variance(u, p))
+
+    def sq_err(k):
+        g = ocs.sample_and_aggregate(upd, w, 3, k, sampler="optimal").aggregate
+        return sum(
+            jnp.sum(jnp.square(a - b))
+            for a, b in zip(jax.tree_util.tree_leaves(g), jax.tree_util.tree_leaves(full))
+        )
+
+    fn = jax.jit(sq_err)
+    vals = [float(fn(jax.random.fold_in(key, i))) for i in range(3000)]
+    mc = float(np.mean(vals))
+    assert mc == pytest.approx(predicted, rel=0.15)
+
+
+def test_expected_clients_budget():
+    key = jax.random.PRNGKey(3)
+    upd = _updates(key, heavy=[1, 1, 1, 1, 1, 1, 10, 30.0])
+    w = jnp.full((8,), 1 / 8)
+    for sampler in ["optimal", "aocs"]:
+        res = ocs.sample_and_aggregate(upd, w, 3, key, sampler=sampler)
+        assert float(res.expected_clients) == pytest.approx(3.0, rel=1e-3)
+
+
+def test_kernel_norms_match_ocs_norms():
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(4)
+    upd = _updates(key, n=5, d=64)
+    w = jnp.full((5,), 0.2)
+    want = ocs.client_norms(upd, w)
+    got = ops.tree_client_norms(upd, w, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)

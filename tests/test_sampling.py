@@ -1,0 +1,129 @@
+"""Property tests for the paper's core math (Eq. 7, Algorithm 2, Lemma 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import improvement, sampling
+
+norm_vectors = st.lists(
+    st.floats(min_value=0.0, max_value=1e4, allow_nan=False, width=32),
+    min_size=2,
+    max_size=64,
+)
+
+
+def _m_for(u):
+    return max(1, len(u) // 3)
+
+
+@settings(max_examples=200, deadline=None)
+@given(norm_vectors)
+def test_optimal_probabilities_properties(u_list):
+    u = jnp.asarray(u_list, jnp.float32)
+    n = len(u_list)
+    m = _m_for(u_list)
+    p = np.asarray(sampling.optimal_probabilities(u, m))
+    assert np.all(p >= -1e-6) and np.all(p <= 1 + 1e-6)
+    # budget: sum p <= m (+ tolerance); equality when enough non-zero norms
+    assert p.sum() <= m + 1e-3 * m + 1e-4
+    nonzero = np.asarray(u) > 1e-12  # matches sampling._EPS
+    if nonzero.sum() >= m:
+        assert p.sum() == pytest.approx(m, rel=2e-3)
+    # monotone: larger norm -> probability at least as large
+    order = np.argsort(np.asarray(u))
+    ps = p[order]
+    assert np.all(np.diff(ps) >= -1e-5)
+    # zero-norm clients are never sampled
+    assert np.all(p[~nonzero] <= 1e-6)
+
+
+@settings(max_examples=200, deadline=None)
+@given(norm_vectors)
+def test_aocs_matches_exact(u_list):
+    """Paper footnote 4: Algorithms 1 and 2 give identical results."""
+    u = jnp.asarray(u_list, jnp.float32)
+    m = _m_for(u_list)
+    p_exact = np.asarray(sampling.optimal_probabilities(u, m))
+    p_aocs = np.asarray(sampling.aocs_probabilities(u, m, j_max=16))
+    np.testing.assert_allclose(p_aocs, p_exact, atol=2e-4)
+
+
+def test_equal_norms_give_uniform():
+    u = jnp.ones(10)
+    p = sampling.optimal_probabilities(u, 4)
+    np.testing.assert_allclose(np.asarray(p), 0.4, rtol=1e-6)
+
+
+def test_heavy_client_always_sampled():
+    u = jnp.array([1.0, 1.0, 1.0, 100.0])
+    p = np.asarray(sampling.optimal_probabilities(u, 2))
+    assert p[3] == pytest.approx(1.0)
+    np.testing.assert_allclose(p[:3], (2 - 1) * 1 / 3, rtol=1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(norm_vectors)
+def test_optimal_variance_not_worse_than_uniform(u_list):
+    """alpha^k in [0, 1] (Definition 11): OCS variance <= uniform variance."""
+    u = jnp.asarray(u_list, jnp.float32)
+    m = _m_for(u_list)
+    p_opt = sampling.optimal_probabilities(u, m)
+    p_uni = sampling.uniform_probabilities(u, m)
+    v_opt = float(improvement.sampling_variance(u, p_opt))
+    v_uni = float(improvement.sampling_variance(u, p_uni))
+    assert v_opt <= v_uni * (1 + 1e-4) + 1e-6
+    alpha, gamma = improvement.improvement_factors(u, m)
+    assert 0.0 <= float(alpha) <= 1.0
+    assert m / len(u_list) - 1e-6 <= float(gamma) <= 1.0 + 1e-6
+
+
+def test_optimality_vs_random_candidates():
+    """Eq. 7 beats any random feasible probability vector (KKT optimality)."""
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.exponential(size=12).astype(np.float32))
+    m = 4
+    p_opt = sampling.optimal_probabilities(u, m)
+    v_opt = float(improvement.sampling_variance(u, p_opt))
+    for _ in range(300):
+        raw = rng.uniform(0.01, 1.0, size=12)
+        p = raw / raw.sum() * m
+        p = np.minimum(p, 1.0)
+        v = float(improvement.sampling_variance(u, jnp.asarray(p, jnp.float32)))
+        assert v_opt <= v + 1e-4 * abs(v)
+
+
+@settings(max_examples=100, deadline=None)
+@given(norm_vectors, st.floats(min_value=0.015625, max_value=64.0, allow_nan=False, width=32))
+def test_scale_invariance(u_list, c):
+    """p depends only on relative norms: p(c*u) == p(u)."""
+    u = jnp.asarray(u_list, jnp.float32)
+    m = _m_for(u_list)
+    p1 = np.asarray(sampling.optimal_probabilities(u, m))
+    p2 = np.asarray(sampling.optimal_probabilities(u * c, m))
+    np.testing.assert_allclose(p1, p2, atol=2e-4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(norm_vectors, st.randoms(use_true_random=False))
+def test_permutation_equivariance(u_list, rnd):
+    u = np.asarray(u_list, np.float32)
+    m = _m_for(u_list)
+    perm = np.arange(len(u))
+    rnd.shuffle(perm)
+    p = np.asarray(sampling.optimal_probabilities(jnp.asarray(u), m))
+    pp = np.asarray(sampling.optimal_probabilities(jnp.asarray(u[perm]), m))
+    np.testing.assert_allclose(pp, p[perm], atol=2e-4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(norm_vectors)
+def test_aocs_converges_quickly(u_list):
+    """Remark 3: j_max = O(1) suffices — 4 iterations already match 32."""
+    u = jnp.asarray(u_list, jnp.float32)
+    m = _m_for(u_list)
+    p4 = np.asarray(sampling.aocs_probabilities(u, m, j_max=4))
+    p32 = np.asarray(sampling.aocs_probabilities(u, m, j_max=32))
+    np.testing.assert_allclose(p4, p32, atol=5e-4)
