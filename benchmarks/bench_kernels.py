@@ -39,6 +39,18 @@ def run():
         reps=2,
     )
     csv_line("client_sqnorms_pallas_interp_32x16K", t_int, "correctness-mode")
+    # fused masked scale-&-aggregate (OCS Eq. 2 contraction), interpret mode
+    scale = jnp.where(jnp.arange(32) % 4 == 0, 32 / 6.0, 0.0)
+    t_agg = _time(
+        lambda u: ops.masked_scale_aggregate(u[:, : 1 << 14], scale, chunk=4096,
+                                             interpret=True),
+        upd, reps=2,
+    )
+    csv_line("masked_scale_aggregate_pallas_interp_32x16K", t_agg, "correctness-mode")
+    t_agg_xla = _time(
+        jax.jit(lambda u: jnp.sum(u * scale[:, None], axis=0)), upd, reps=5
+    )
+    csv_line("masked_scale_aggregate_xla_32x4M", t_agg_xla, f"bytes={upd.size*4}")
 
     # attention: dense vs chunked (flash-style) at 4k, f32
     b, s, h, hd = 1, 4096, 8, 128

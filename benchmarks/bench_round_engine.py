@@ -1,0 +1,103 @@
+"""Round-engine matrix microbenchmark: µs/round for every (memory policy x
+aggregation backend) combination of fl.engine.RoundEngine on the
+FEMNIST-shaped workload, plus a compression variant — the numbers that decide
+which engine the trainer should default to on a given platform.
+
+On this CPU container the pallas backend runs in interpret mode, so its
+wall-clock is a correctness proxy only (the artifact records the mode); on a
+TPU the same harness times the compiled kernels.
+
+Artifact: benchmarks/artifacts/round_engine.json
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.configs.base import FLConfig
+from repro.data import femnist_like
+from repro.fl.engine import RoundEngine
+from repro.fl.round import client_weights
+from repro.models.simple import mlp_classifier
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+COMBOS = list(itertools.product(["vmap", "scan"], ["jnp", "pallas"]))
+
+
+def _time_step(step, params, batch, weights, key, reps):
+    """Returns (us_per_round, round output for `key` itself)."""
+    metrics_out = step(params, (), batch, weights, key)
+    jax.block_until_ready(metrics_out)  # compile
+    t0 = time.time()
+    for i in range(reps):
+        out = step(params, (), batch, weights, jax.random.fold_in(key, i))
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6, metrics_out
+
+
+def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0):
+    os.makedirs(ART, exist_ok=True)
+    ds = femnist_like(dataset_id=1, n_clients=max(2 * n, 64), seed=seed)
+    init, loss, _ = mlp_classifier(ds.input_dim, ds.num_classes, hidden=64)
+    rng = np.random.default_rng(seed)
+    clients = rng.choice(ds.n_clients, size=n, replace=False)
+    batch = ds.sample_round_batches(rng, clients, local_steps, batch_size)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    key = jax.random.PRNGKey(seed)
+    params = init(jax.random.fold_in(key, 1))
+    dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+    results = {
+        "workload": {
+            "n_clients": n, "expected_clients": m, "local_steps": local_steps,
+            "batch_size": batch_size, "model_dim": dim, "reps": reps,
+            "backend_platform": jax.default_backend(),
+            "pallas_interpret": jax.default_backend() != "tpu",
+        },
+        "combos": {},
+    }
+    for compression in ("none", "randk"):
+        fl = FLConfig(
+            n_clients=n, expected_clients=m, sampler="aocs",
+            local_steps=local_steps, lr_local=0.125,
+            compression=compression, compression_param=0.1,
+        )
+        weights = client_weights(fl)
+        masks = {}
+        for mem, be in COMBOS:
+            engine = RoundEngine(loss, fl, memory=mem, backend=be, scan_group=8)
+            step = jax.jit(engine.make_step())
+            us, (_, _, metrics) = _time_step(step, params, batch, weights, key, reps)
+            masks[(mem, be)] = np.asarray(metrics.mask)
+            tag = f"{mem}+{be}" + ("" if compression == "none" else f"+{compression}")
+            csv_line(
+                f"round_engine_{tag}", us,
+                f"sent={int(metrics.mask.sum())};loss={float(metrics.loss):.4f}",
+            )
+            results["combos"][tag] = {
+                "us_per_round": us,
+                "memory": mem,
+                "backend": be,
+                "compression": compression,
+                "sent_clients": int(metrics.mask.sum()),
+            }
+        # the matrix is only comparable if every combo made the same decisions
+        ref = masks[("vmap", "jnp")]
+        assert all(np.array_equal(ref, v) for v in masks.values()), "mask divergence"
+
+    with open(os.path.join(ART, "round_engine.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    run()

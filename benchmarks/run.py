@@ -28,6 +28,7 @@ def main() -> None:
         bench_femnist,
         bench_kernels,
         bench_roofline,
+        bench_round_engine,
         bench_shakespeare,
         bench_stepsize,
         bench_variance,
@@ -48,6 +49,8 @@ def main() -> None:
         "compression": lambda: bench_compression.run(rounds=80 if args.full else 30),
         # kernel hot-spots
         "kernels": lambda: bench_kernels.run(),
+        # round-engine matrix: (vmap|scan) x (jnp|pallas) µs/round
+        "round_engine": lambda: bench_round_engine.run(reps=10 if args.full else 5),
         # deliverable (g): roofline table from dry-run artifacts
         "roofline": lambda: bench_roofline.run(),
     }

@@ -14,9 +14,8 @@ import numpy as np
 
 from repro.configs import get
 from repro.configs.base import FLConfig
-from repro.core.bits import BitsLedger
 from repro.data import charlm
-from repro.fl.round import client_weights, make_round
+from repro.fl.round import client_weights, make_round, round_bits
 from repro.models import build_model
 
 
@@ -41,7 +40,6 @@ def main():
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
-    ledger = BitsLedger(dim)
     step = jax.jit(make_round(model.loss, fl))
     w = client_weights(fl)
     rng = np.random.default_rng(0)
@@ -66,7 +64,7 @@ def main():
                 rng.normal(size=(fl.n_clients, fl.local_steps, args.batch,
                                  cfg.prefix_tokens, cfg.d_model)) * 0.02, jnp.float32)
         params, _, m = step(params, (), batch, w, jax.random.fold_in(key, k))
-        bits += ledger.round_bits(m.mask, fl.sampler, fl.n_clients, fl.j_max)
+        bits += round_bits(fl, dim, m.mask)
         if k % 5 == 0 or k == args.rounds - 1:
             print(f"[round {k:3d}] loss {float(m.loss):.4f} "
                   f"alpha {float(m.alpha):.3f} sent {int(m.sent_clients)}"

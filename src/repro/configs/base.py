@@ -214,3 +214,7 @@ class FLConfig:
     compression_param: float = 0.1 # randk fraction / qsgd levels
     # paper Appendix E: per-client availability probability q (1.0 = always)
     availability: float = 1.0
+    # round-engine execution policy (fl/engine.py) — orthogonal axes:
+    round_engine: str = "vmap"     # memory policy: vmap | scan (two-pass OCS)
+    agg_backend: str = "jnp"       # masked-aggregate backend: jnp | pallas
+    scan_group: int = 2            # clients per scan group (round_engine='scan')

@@ -5,6 +5,13 @@ This is the composable module the FL runtime calls once per round.  All inputs
 carry a leading client axis ``n``; under pjit/GSPMD that axis is sharded over
 the ``('pod','data')`` mesh axes so the client-sum below lowers to the
 cross-client all-reduce that models client->master communication.
+
+The layer is split in two so every round-engine path shares one copy of the
+sampling math (``sampling_plan``: norms -> probs -> mask -> scale, the only
+place the Bernoulli draws and the ``_EPS`` guards live) while the heavy
+cross-client contraction is swappable (``aggregate_updates``: portable jnp
+tree-map, or the fused Pallas kernel that streams the client-major matrix in
+one HBM pass — see kernels/masked_aggregate.py).
 """
 
 from __future__ import annotations
@@ -19,6 +26,8 @@ from repro.core.improvement import improvement_factors
 
 _EPS = 1e-12
 
+AGG_BACKENDS = ("jnp", "pallas")
+
 
 class OCSResult(NamedTuple):
     aggregate: Any          # pytree, same structure as one client's update
@@ -27,6 +36,24 @@ class OCSResult(NamedTuple):
     norms: jax.Array        # (n,) weighted update norms ||w_i U_i||
     alpha: jax.Array        # improvement factor (Def. 11)
     gamma: jax.Array        # relative improvement factor (Def. 12)
+    expected_clients: jax.Array  # sum(p) <= m
+
+
+class SamplingPlan(NamedTuple):
+    """Everything the master decides from the (n,) norm vector alone.
+
+    ``scale`` is the per-client coefficient of the unbiased estimator:
+    ``mask_i * w_i / (p_i * q)`` (zero for unsampled clients), so any backend
+    can realise the aggregate as the single contraction ``sum_i scale_i U_i``.
+    """
+
+    probs: jax.Array             # (n,) inclusion probabilities
+    mask: jax.Array              # (n,) realized participation (incl. availability)
+    scale: jax.Array             # (n,) f32 estimator coefficients
+    avail: jax.Array             # (n,) availability draws (all-True when q = 1)
+    norms: jax.Array             # (n,) norms the plan was computed from
+    alpha: jax.Array
+    gamma: jax.Array
     expected_clients: jax.Array  # sum(p) <= m
 
 
@@ -49,32 +76,24 @@ def client_norms(updates: Any, weights: jax.Array) -> jax.Array:
     return weights.astype(jnp.float32) * jnp.sqrt(sq)
 
 
-def sample_and_aggregate(
-    updates: Any,
+def sampling_plan(
+    norms: jax.Array,
     weights: jax.Array,
     m: int,
     key: jax.Array,
     sampler: str | Callable = "aocs",
     j_max: int = 4,
-    norms: jax.Array | None = None,
     availability: float = 1.0,
-) -> OCSResult:
-    """One round of optimal client sampling.
+) -> SamplingPlan:
+    """Norms -> probabilities -> Bernoulli mask -> estimator coefficients.
 
-    Args:
-      updates: pytree of per-client updates, every leaf shaped ``(n, ...)``.
-      weights: ``(n,)`` client weights ``w_i`` (sum to 1).
-      m: expected number of communicating clients.
-      key: PRNG key for the independent Bernoulli participation draws.
-      sampler: 'optimal' | 'aocs' | 'uniform' | 'full' or a callable.
-      norms: optionally precomputed ``||w_i U_i||`` (e.g. from the Pallas
-        fused-norm kernel); computed here otherwise.
-
-    Returns an :class:`OCSResult` whose ``aggregate`` is the unbiased estimator
-    ``sum_i mask_i * (w_i / p_i) * U_i`` of the full update ``sum_i w_i U_i``.
+    Deterministic in ``key``: the availability split (taken iff
+    ``availability < 1``) and the participation draw consume the key in a
+    fixed order, so two engines fed the same norms and key produce bitwise
+    identical masks — the property the engine-parity tests gate on.
     """
     fn = sampling.SAMPLERS[sampler] if isinstance(sampler, str) else sampler
-    u = client_norms(updates, weights) if norms is None else norms
+    u = jnp.asarray(norms)
     n = u.shape[0]
     # paper Appendix E: partial availability — clients are available with
     # probability q; sampling acts on the available set and the estimator
@@ -95,19 +114,89 @@ def sample_and_aggregate(
         weights.astype(jnp.float32) / jnp.maximum(p * availability, _EPS),
         0.0,
     )
-
-    def agg(leaf):
-        s = scale.reshape((n,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
-        return jnp.sum(leaf * s, axis=0)
-
-    aggregate = jax.tree_util.tree_map(agg, updates)
     alpha, gamma = improvement_factors(u, m)
-    return OCSResult(
-        aggregate=aggregate,
+    return SamplingPlan(
         probs=p,
         mask=mask,
+        scale=scale,
+        avail=avail,
         norms=u,
         alpha=alpha,
         gamma=gamma,
         expected_clients=jnp.sum(p),
+    )
+
+
+def aggregate_updates(
+    updates: Any,
+    scale: jax.Array,
+    backend: str = "jnp",
+    interpret: bool | None = None,
+) -> Any:
+    """``sum_i scale_i * U_i`` over the leading client axis of every leaf.
+
+    backend='jnp': portable tree-map contraction (XLA materialises the scaled
+    per-client intermediate).  backend='pallas': the fused masked
+    scale-&-aggregate kernel — single pass over the client-major matrix with
+    no scaled intermediate; for a pytree input the wrapper first concatenates
+    the leaves into that matrix (see ops.tree_masked_aggregate's note on the
+    cost of that copy).
+    """
+    if backend == "jnp":
+        n = scale.shape[0]
+
+        def agg(leaf):
+            s = scale.reshape((n,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+            return jnp.sum(leaf * s, axis=0)
+
+        return jax.tree_util.tree_map(agg, updates)
+    if backend == "pallas":
+        from repro.kernels import ops  # deferred: core stays importable sans kernels
+
+        return ops.tree_masked_aggregate(updates, scale, interpret=interpret)
+    raise ValueError(f"unknown aggregation backend {backend!r}; want one of {AGG_BACKENDS}")
+
+
+def sample_and_aggregate(
+    updates: Any,
+    weights: jax.Array,
+    m: int,
+    key: jax.Array,
+    sampler: str | Callable = "aocs",
+    j_max: int = 4,
+    norms: jax.Array | None = None,
+    availability: float = 1.0,
+    backend: str = "jnp",
+    interpret: bool | None = None,
+) -> OCSResult:
+    """One round of optimal client sampling.
+
+    Args:
+      updates: pytree of per-client updates, every leaf shaped ``(n, ...)``.
+      weights: ``(n,)`` client weights ``w_i`` (sum to 1).
+      m: expected number of communicating clients.
+      key: PRNG key for the independent Bernoulli participation draws.
+      sampler: 'optimal' | 'aocs' | 'uniform' | 'full' or a callable.
+      norms: optionally precomputed ``||w_i U_i||`` (e.g. from the Pallas
+        fused-norm kernel, or a round engine's first pass); computed here
+        otherwise.
+      backend: 'jnp' | 'pallas' — how the masked cross-client sum is computed
+        (see :func:`aggregate_updates`).
+
+    Returns an :class:`OCSResult` whose ``aggregate`` is the unbiased estimator
+    ``sum_i mask_i * (w_i / p_i) * U_i`` of the full update ``sum_i w_i U_i``.
+    """
+    u = client_norms(updates, weights) if norms is None else norms
+    plan = sampling_plan(
+        u, weights, m, key, sampler=sampler, j_max=j_max, availability=availability
+    )
+    aggregate = aggregate_updates(updates, plan.scale, backend=backend, interpret=interpret)
+    return OCSResult(
+        aggregate=aggregate,
+        probs=plan.probs,
+        mask=plan.mask,
+        norms=plan.norms,
+        alpha=plan.alpha,
+        gamma=plan.gamma,
+        expected_clients=plan.expected_clients,
     )

@@ -1,4 +1,10 @@
-"""Federated runtime: rounds, trainer, client-pool utilities."""
+"""Federated runtime: round engine, trainer, client-pool utilities."""
 
-from repro.fl.round import client_weights, make_local_update, make_round  # noqa: F401
+from repro.fl.engine import RoundEngine, RoundMetrics  # noqa: F401
+from repro.fl.round import (  # noqa: F401
+    client_weights,
+    make_local_update,
+    make_round,
+    round_bits,
+)
 from repro.fl.trainer import History, run_training  # noqa: F401

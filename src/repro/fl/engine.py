@@ -1,0 +1,301 @@
+"""Unified round engine: one federated communication round (Algorithm 3)
+under two orthogonal execution axes.
+
+* **memory policy** — how client updates are held while the master samples:
+
+  - ``'vmap'`` (paper-faithful baseline): all n client updates are
+    materialised simultaneously (leading client axis sharded over the data
+    mesh axes) before sampling — O(n * d / shards) live memory.
+  - ``'scan'`` (beyond-paper, two-pass OCS): clients are processed in groups
+    of ``scan_group`` by a sequential scan; pass 1 computes only the update
+    NORMS (updates die after their norm is taken), the sampling plan is
+    computed, and pass 2 recomputes each group's updates and accumulates the
+    scaled aggregate.  Live memory drops from O(n*d) to O(scan_group*d) at
+    the price of computing local updates twice.
+
+* **aggregation backend** — how ``sum_i mask_i * (w_i/p_i) * U_i`` is
+  contracted: ``'jnp'`` (portable tree-map) or ``'pallas'`` (the fused
+  streaming kernel in kernels/masked_aggregate.py — single HBM pass, no
+  scaled per-client intermediate).
+
+All four combinations have full feature parity — unbiased compression,
+partial availability (Appendix E), server optimizer — and are deterministic
+in the round key: the key splits (compression keys, availability draw,
+participation draw) happen in one fixed order via ``ocs.sampling_plan``, so
+the same key yields bitwise identical masks on every path (gated by
+tests/test_round_engine.py).
+
+Layout: every ``batch`` leaf is shaped ``(n_clients, local_steps, b, ...)``;
+the client axis is sharded over the ``('pod','data')`` mesh axes under pjit,
+so the cross-client aggregation at the end lowers to the all-reduce that
+models client->master communication.
+
+``local_update`` follows the paper:
+  * fedavg: R local SGD steps with lr eta_l, update U_i = x^k - y_{i,R}
+  * dsgd  : U_i = g_i (stochastic gradient of the local batch)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import ocs
+
+MEMORY_POLICIES = ("vmap", "scan")
+
+
+class RoundMetrics(NamedTuple):
+    loss: jax.Array
+    alpha: jax.Array
+    gamma: jax.Array
+    expected_clients: jax.Array
+    sent_clients: jax.Array
+    probs: jax.Array
+    norms: jax.Array
+    mask: jax.Array
+
+
+def make_local_update(loss_fn: Callable, fl: FLConfig):
+    """loss_fn: (params, batch) -> (scalar, metrics dict)."""
+
+    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
+
+    def fedavg_update(params, client_batch):
+        # `_step_mask` (R,) emulates "one local epoch": clients with little
+        # data take fewer effective steps (masked), as in the paper's setup.
+        client_batch = dict(client_batch)
+        step_mask = client_batch.pop("_step_mask", None)
+        if step_mask is None:
+            step_mask = jnp.ones((fl.local_steps,), jnp.float32)
+
+        def step(p, xs):
+            batch_r, m = xs
+            loss, g = grad_fn(p, batch_r)
+            p = jax.tree_util.tree_map(
+                lambda a, b: (a - m * fl.lr_local * b.astype(a.dtype)).astype(a.dtype),
+                p,
+                g,
+            )
+            return p, (loss, m)
+
+        y, (losses, ms) = jax.lax.scan(step, params, (client_batch, step_mask))
+        update = jax.tree_util.tree_map(
+            lambda a, b: (a - b).astype(a.dtype), params, y
+        )
+        loss = jnp.sum(losses * ms) / jnp.maximum(jnp.sum(ms), 1.0)
+        return update, loss
+
+    def dsgd_update(params, client_batch):
+        client_batch = dict(client_batch)
+        client_batch.pop("_step_mask", None)
+        batch = jax.tree_util.tree_map(lambda x: x.reshape((-1,) + x.shape[2:]), client_batch)
+        loss, g = grad_fn(params, batch)
+        return g, loss
+
+    return fedavg_update if fl.algorithm == "fedavg" else dsgd_update
+
+
+class RoundEngine:
+    """Builds the jit-able ``round_step`` for one (memory, backend) pair.
+
+    ``round_step(params, opt_state, batch, weights, key) ->
+    (params, opt_state, RoundMetrics)``.
+
+    Defaults come from the config (``fl.round_engine`` / ``fl.agg_backend`` /
+    ``fl.scan_group``); keyword arguments override per-instance so benchmarks
+    can sweep the matrix without minting configs.
+    """
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        fl: FLConfig,
+        server_opt=None,
+        *,
+        memory: str | None = None,
+        backend: str | None = None,
+        scan_group: int | None = None,
+        interpret: bool | None = None,
+    ):
+        self.fl = fl
+        self.server_opt = server_opt
+        self.memory = memory if memory is not None else fl.round_engine
+        self.backend = backend if backend is not None else fl.agg_backend
+        self.scan_group = scan_group if scan_group is not None else fl.scan_group
+        self.interpret = interpret
+        if self.memory not in MEMORY_POLICIES:
+            raise ValueError(
+                f"unknown memory policy {self.memory!r}; want one of {MEMORY_POLICIES}"
+            )
+        if self.backend not in ocs.AGG_BACKENDS:
+            raise ValueError(
+                f"unknown aggregation backend {self.backend!r}; "
+                f"want one of {ocs.AGG_BACKENDS}"
+            )
+        if self.memory == "scan" and fl.n_clients % self.scan_group:
+            raise ValueError(
+                f"n_clients={fl.n_clients} not divisible by scan_group={self.scan_group}"
+            )
+        self._local_update = make_local_update(loss_fn, fl)
+
+    # -- shared pieces ------------------------------------------------------
+
+    def _compress_group(self, updates, keys):
+        """Compress a block of client updates with per-client keys (or no-op)."""
+        fl = self.fl
+        if fl.compression == "none":
+            return updates
+        from repro.core.compression import compress_update
+
+        return jax.vmap(
+            lambda u, k: compress_update(u, k, fl.compression, fl.compression_param)
+        )(updates, keys)
+
+    def _apply_server(self, params, opt_state, aggregate):
+        if self.server_opt is None:
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (p - self.fl.lr_global * g.astype(p.dtype)).astype(p.dtype),
+                params,
+                aggregate,
+            )
+            return new_params, opt_state
+        return self.server_opt.update(aggregate, opt_state, params)
+
+    def _metrics(self, plan: ocs.SamplingPlan, losses) -> RoundMetrics:
+        return RoundMetrics(
+            loss=jnp.mean(losses),
+            alpha=plan.alpha,
+            gamma=plan.gamma,
+            expected_clients=plan.expected_clients,
+            sent_clients=jnp.sum(plan.mask),
+            probs=plan.probs,
+            norms=plan.norms,
+            mask=plan.mask,
+        )
+
+    def _plan(self, u, weights, k_sample) -> ocs.SamplingPlan:
+        fl = self.fl
+        return ocs.sampling_plan(
+            u, weights, fl.expected_clients, k_sample,
+            sampler=fl.sampler, j_max=fl.j_max, availability=fl.availability,
+        )
+
+    # -- memory policies ----------------------------------------------------
+
+    def make_step(self) -> Callable:
+        return self._make_vmap_step() if self.memory == "vmap" else self._make_scan_step()
+
+    def _make_vmap_step(self):
+        def round_step(params, opt_state, batch, weights, key):
+            k_sample, k_comp = jax.random.split(key)
+            updates, losses = jax.vmap(self._local_update, in_axes=(None, 0))(
+                params, batch
+            )
+            # paper future-work: unbiased compression composed with OCS —
+            # each client compresses BEFORE norms/sampling (it reports the
+            # norm of what it would actually send).
+            updates = self._compress_group(
+                updates, jax.random.split(k_comp, weights.shape[0])
+            )
+            u = ocs.client_norms(updates, weights)
+            plan = self._plan(u, weights, k_sample)
+            aggregate = ocs.aggregate_updates(
+                updates, plan.scale, backend=self.backend, interpret=self.interpret
+            )
+            new_params, new_opt = self._apply_server(params, opt_state, aggregate)
+            return new_params, new_opt, self._metrics(plan, losses)
+
+        return round_step
+
+    def _make_scan_step(self):
+        fl = self.fl
+        n, g = fl.n_clients, self.scan_group
+        n_groups = n // g
+
+        def group_batches(batch):
+            return jax.tree_util.tree_map(
+                lambda x: x.reshape((n_groups, g) + x.shape[1:]), batch
+            )
+
+        def round_step(params, opt_state, batch, weights, key):
+            k_sample, k_comp = jax.random.split(key)
+            gbatch = group_batches(batch)
+            w_groups = weights.reshape(n_groups, g)
+            # same per-client compression keys as the vmap path, re-derived in
+            # both passes, so compressed updates (hence norms, hence masks)
+            # match across all four engine combinations.
+            comp_keys = jax.random.split(k_comp, n)
+            comp_keys = comp_keys.reshape((n_groups, g) + comp_keys.shape[1:])
+
+            def group_updates(gb, kg):
+                upd, losses = jax.vmap(self._local_update, in_axes=(None, 0))(
+                    params, gb
+                )
+                return self._compress_group(upd, kg), losses
+
+            # pass 1: norms only — each group's updates are dead after this
+            # step, so live memory is O(g * |params|) instead of O(n * |params|).
+            def norm_pass(_, inp):
+                gb, wg, kg = inp
+                upd, losses = group_updates(gb, kg)
+                return None, (ocs.client_norms(upd, wg), losses)
+
+            _, (norms_g, losses_g) = jax.lax.scan(
+                norm_pass, None, (gbatch, w_groups, comp_keys)
+            )
+            u = norms_g.reshape(n)
+            losses = losses_g.reshape(n)
+            plan = self._plan(u, weights, k_sample)
+            scale_g = plan.scale.reshape(n_groups, g)
+
+            # pass 2: recompute updates, accumulate the scaled aggregate.
+            if self.backend == "pallas":
+                from repro.kernels import ops as kops
+
+                # accumulate the flat (D,) aggregate: each group contracts
+                # through the fused kernel, streaming (g, chunk) tiles.
+                dim = sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+                def agg_pass(acc, inp):
+                    gb, sc, kg = inp
+                    upd, _ = group_updates(gb, kg)
+                    flat = kops.tree_to_client_matrix(upd)
+                    return acc + kops.masked_scale_aggregate(
+                        flat, sc, interpret=self.interpret
+                    ), None
+
+                agg_flat, _ = jax.lax.scan(
+                    agg_pass, jnp.zeros((dim,), jnp.float32),
+                    (gbatch, scale_g, comp_keys),
+                )
+                aggregate = kops.client_matrix_to_tree(
+                    agg_flat, params, strip_client_axis=False
+                )
+            else:
+                zero = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params
+                )
+
+                def agg_pass(acc, inp):
+                    gb, sc, kg = inp
+                    upd, _ = group_updates(gb, kg)
+                    acc = jax.tree_util.tree_map(
+                        lambda a, ug: a
+                        + jnp.tensordot(sc, ug.astype(jnp.float32), axes=(0, 0)),
+                        acc,
+                        upd,
+                    )
+                    return acc, None
+
+                aggregate, _ = jax.lax.scan(
+                    agg_pass, zero, (gbatch, scale_g, comp_keys)
+                )
+
+            new_params, new_opt = self._apply_server(params, opt_state, aggregate)
+            return new_params, new_opt, self._metrics(plan, losses)
+
+        return round_step

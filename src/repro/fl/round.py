@@ -1,41 +1,23 @@
-"""One federated communication round (Algorithm 3 of the paper) as a single
-jitted program.
+"""One federated communication round (Algorithm 3 of the paper).
 
-Layout: every ``batch`` leaf is shaped ``(n_clients, local_steps, b, ...)``;
-the client axis is sharded over the ``('pod','data')`` mesh axes under pjit,
-so the cross-client aggregation at the end lowers to the all-reduce that
-models client->master communication.
-
-``local_update`` follows the paper:
-  * fedavg: R local SGD steps with lr eta_l, update U_i = x^k - y_{i,R}
-  * dsgd  : U_i = g_i (stochastic gradient of the local batch)
-
-The master then applies OCS/AOCS/uniform/full sampling (repro.core) and takes
-the global step  x <- x - eta_g * G.
+The execution machinery lives in :mod:`repro.fl.engine` (RoundEngine: memory
+policy 'vmap' | 'scan' x aggregation backend 'jnp' | 'pallas'); this module
+keeps the stable entry points the rest of the repo and the tests use.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core import ocs
 from repro.core.bits import BitsLedger
-
-
-class RoundMetrics(NamedTuple):
-    loss: jax.Array
-    alpha: jax.Array
-    gamma: jax.Array
-    expected_clients: jax.Array
-    sent_clients: jax.Array
-    probs: jax.Array
-    norms: jax.Array
-    mask: jax.Array
+from repro.fl.engine import (  # noqa: F401  (re-exported stable API)
+    RoundEngine,
+    RoundMetrics,
+    make_local_update,
+)
 
 
 def client_weights(fl: FLConfig, sizes=None):
@@ -45,192 +27,29 @@ def client_weights(fl: FLConfig, sizes=None):
     return jnp.full((fl.n_clients,), 1.0 / fl.n_clients, jnp.float32)
 
 
-def make_local_update(loss_fn: Callable, fl: FLConfig):
-    """loss_fn: (params, batch) -> (scalar, metrics dict)."""
-
-    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
-
-    def fedavg_update(params, client_batch):
-        # `_step_mask` (R,) emulates "one local epoch": clients with little
-        # data take fewer effective steps (masked), as in the paper's setup.
-        client_batch = dict(client_batch)
-        step_mask = client_batch.pop("_step_mask", None)
-        if step_mask is None:
-            step_mask = jnp.ones((fl.local_steps,), jnp.float32)
-
-        def step(p, xs):
-            batch_r, m = xs
-            loss, g = grad_fn(p, batch_r)
-            p = jax.tree_util.tree_map(
-                lambda a, b: (a - m * fl.lr_local * b.astype(a.dtype)).astype(a.dtype),
-                p,
-                g,
-            )
-            return p, (loss, m)
-
-        y, (losses, ms) = jax.lax.scan(step, params, (client_batch, step_mask))
-        update = jax.tree_util.tree_map(
-            lambda a, b: (a - b).astype(a.dtype), params, y
-        )
-        loss = jnp.sum(losses * ms) / jnp.maximum(jnp.sum(ms), 1.0)
-        return update, loss
-
-    def dsgd_update(params, client_batch):
-        client_batch = dict(client_batch)
-        client_batch.pop("_step_mask", None)
-        batch = jax.tree_util.tree_map(lambda x: x.reshape((-1,) + x.shape[2:]), client_batch)
-        loss, g = grad_fn(params, batch)
-        return g, loss
-
-    return fedavg_update if fl.algorithm == "fedavg" else dsgd_update
-
-
-def make_round(loss_fn: Callable, fl: FLConfig, server_opt=None, mode: str = "vmap",
-               scan_group: int = 2):
+def make_round(loss_fn: Callable, fl: FLConfig, server_opt=None, mode: str | None = None,
+               scan_group: int | None = None, backend: str | None = None):
     """Returns round_step(params, opt_state, batch, weights, key) ->
     (params, opt_state, RoundMetrics).
 
-    mode='vmap' (paper-faithful baseline): all n client updates are
-    materialised simultaneously (leading client axis sharded over the data
-    mesh axes) before sampling — O(n * d / shards) live memory.
-
-    mode='scan' (beyond-paper, two-pass OCS): clients are processed in
-    groups of ``scan_group`` by a sequential scan; pass 1 computes only the
-    update NORMS (updates die after their norm is taken), the sampling
-    probabilities and Bernoulli masks are then computed, and pass 2
-    recomputes each group's updates and accumulates the scaled aggregate.
-    Live memory drops from O(n*d) to O(scan_group*d) at the price of
-    computing local updates twice.  Semantically identical to 'vmap'
-    (same norms -> same probabilities -> same masks given the same key).
+    ``mode`` / ``scan_group`` / ``backend`` override the config's
+    ``round_engine`` / ``scan_group`` / ``agg_backend`` when given (kept for
+    existing call sites; new code can drive everything from FLConfig).
     """
-
-    local_update = make_local_update(loss_fn, fl)
-    if mode == "scan":
-        return _make_round_two_pass(loss_fn, fl, local_update, server_opt, scan_group)
-
-    def round_step(params, opt_state, batch, weights, key):
-        k_sample, k_comp = jax.random.split(key)
-        updates, losses = jax.vmap(local_update, in_axes=(None, 0))(params, batch)
-        if fl.compression != "none":
-            # paper future-work: unbiased compression composed with OCS —
-            # each client compresses BEFORE norms/sampling (it reports the
-            # norm of what it would actually send).
-            from repro.core.compression import compress_update
-
-            n = weights.shape[0]
-            updates = jax.vmap(
-                lambda u, k: compress_update(u, k, fl.compression, fl.compression_param)
-            )(updates, jax.random.split(k_comp, n))
-        res = ocs.sample_and_aggregate(
-            updates, weights, fl.expected_clients, k_sample,
-            sampler=fl.sampler, j_max=fl.j_max,
-        )
-        if server_opt is None:
-            new_params = jax.tree_util.tree_map(
-                lambda p, g: (p - fl.lr_global * g.astype(p.dtype)).astype(p.dtype),
-                params,
-                res.aggregate,
-            )
-            new_opt = opt_state
-        else:
-            new_params, new_opt = server_opt.update(res.aggregate, opt_state, params)
-        metrics = RoundMetrics(
-            loss=jnp.mean(losses),
-            alpha=res.alpha,
-            gamma=res.gamma,
-            expected_clients=res.expected_clients,
-            sent_clients=jnp.sum(res.mask),
-            probs=res.probs,
-            norms=res.norms,
-            mask=res.mask,
-        )
-        return new_params, new_opt, metrics
-
-    return round_step
+    return RoundEngine(
+        loss_fn, fl, server_opt,
+        memory=mode, backend=backend, scan_group=scan_group,
+    ).make_step()
 
 
 def round_bits(fl: FLConfig, model_dim: int, mask) -> int:
-    return BitsLedger(model_dim).round_bits(mask, fl.sampler, fl.n_clients, fl.j_max)
+    """Uplink bits for one round under the config's sampler AND compressor.
 
-
-def _make_round_two_pass(loss_fn, fl: FLConfig, local_update, server_opt, g: int):
-    """Two-pass OCS (see make_round docstring).  Requires n_clients % g == 0."""
-    from repro.core import sampling as SMP
-    from repro.core.improvement import improvement_factors
-
-    n = fl.n_clients
-    assert n % g == 0, (n, g)
-    n_groups = n // g
-
-    def _group_batches(batch):
-        return jax.tree_util.tree_map(
-            lambda x: x.reshape((n_groups, g) + x.shape[1:]), batch
-        )
-
-    def round_step(params, opt_state, batch, weights, key):
-        k_sample, _ = jax.random.split(key)
-        gbatch = _group_batches(batch)
-        w_groups = weights.reshape(n_groups, g)
-
-        # pass 1: norms only — each group's updates are dead after this step,
-        # so live memory is O(g * |params|) instead of O(n * |params|).
-        def norm_pass(_, inp):
-            gb, wg = inp
-            upd, losses = jax.vmap(local_update, in_axes=(None, 0))(params, gb)
-            return None, (ocs.client_norms(upd, wg), losses)
-
-        _, (norms_g, losses_g) = jax.lax.scan(norm_pass, None, (gbatch, w_groups))
-        u = norms_g.reshape(n)
-        losses = losses_g.reshape(n)
-
-        fn = SMP.SAMPLERS[fl.sampler]
-        p = fn(u, fl.expected_clients, fl.j_max) if fl.sampler == "aocs" else fn(
-            u, fl.expected_clients
-        )
-        mask = jax.random.bernoulli(k_sample, jnp.clip(p, 0.0, 1.0), shape=(n,))
-        scale = jnp.where(
-            mask & (p > 1e-12), weights / jnp.maximum(p, 1e-12), 0.0
-        ).reshape(n_groups, g)
-
-        # pass 2: recompute updates, accumulate the scaled aggregate.
-        zero = jax.tree_util.tree_map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), params
-        )
-
-        def agg_pass(acc, inp):
-            gb, sc = inp
-            upd, _ = jax.vmap(local_update, in_axes=(None, 0))(params, gb)
-            acc = jax.tree_util.tree_map(
-                lambda a, ug: a
-                + jnp.tensordot(sc, ug.astype(jnp.float32), axes=(0, 0)),
-                acc,
-                upd,
-            )
-            return acc, None
-
-        aggregate, _ = jax.lax.scan(agg_pass, zero, (gbatch, scale))
-
-        if server_opt is None:
-            new_params = jax.tree_util.tree_map(
-                lambda pp, gg: (pp - fl.lr_global * gg.astype(pp.dtype)).astype(pp.dtype),
-                params,
-                aggregate,
-            )
-            new_opt = opt_state
-        else:
-            new_params, new_opt = server_opt.update(aggregate, opt_state, params)
-
-        alpha, gamma = improvement_factors(u, fl.expected_clients)
-        metrics = RoundMetrics(
-            loss=jnp.mean(losses),
-            alpha=alpha,
-            gamma=gamma,
-            expected_clients=jnp.sum(p),
-            sent_clients=jnp.sum(mask),
-            probs=p,
-            norms=u,
-            mask=mask,
-        )
-        return new_params, new_opt, metrics
-
-    return round_step
+    Single source of truth for the per-round bill: the trainer, the examples
+    and the benchmarks all charge through here, so the compression discount
+    (which an earlier version silently dropped) is applied everywhere.
+    """
+    return BitsLedger(model_dim).round_bits(
+        mask, fl.sampler, fl.n_clients, fl.j_max,
+        fl.compression, fl.compression_param,
+    )

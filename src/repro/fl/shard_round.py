@@ -89,12 +89,20 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str = "data")
         loss = jax.lax.pmean(jnp.mean(losses), client_axis)
         return new_params, (loss, u_all, p_all, mask_all)
 
-    shard_fn = jax.shard_map(
+    # jax >= 0.6 exposes shard_map at top level (replication check renamed to
+    # check_vma); earlier versions ship it under jax.experimental.
+    if hasattr(jax, "shard_map"):
+        _shard_map, _check = jax.shard_map, {"check_vma": False}
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        _check = {"check_rep": False}
+    shard_fn = _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(client_axis), P(client_axis), P()),
         out_specs=(P(), (P(), P(), P(), P())),
-        check_vma=False,
+        **_check,
     )
 
     def round_step(params, opt_state, batch, weights, key):

@@ -11,8 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.bits import BitsLedger
-from repro.fl.round import client_weights, make_round
+from repro.fl.engine import RoundEngine
+from repro.fl.round import client_weights, round_bits
 
 
 @dataclass
@@ -40,6 +40,7 @@ def run_training(
     eval_every: int = 5,
     seed: int = 0,
     local_epoch: bool = True,
+    server_opt=None,
 ):
     """Train for ``rounds`` communication rounds; returns (params, History).
 
@@ -51,21 +52,24 @@ def run_training(
     key = jax.random.PRNGKey(seed)
     params = init_fn(jax.random.fold_in(key, 1))
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
-    ledger = BitsLedger(dim)
-    round_step = jax.jit(make_round(loss_fn, fl))
+    # engine (memory policy x agg backend) comes from the config; the old
+    # params/opt-state buffers are donated — the round step overwrites them
+    # in place instead of holding both generations live.
+    engine = RoundEngine(loss_fn, fl, server_opt)
+    round_step = jax.jit(engine.make_step(), donate_argnums=(0, 1))
     weights = client_weights(fl)
     hist = History()
     total_bits = 0
+    opt_state = server_opt.init(params) if server_opt is not None else ()
 
     for k in range(rounds):
         clients = rng.choice(dataset.n_clients, size=fl.n_clients, replace=False)
         batch = dataset.sample_round_batches(rng, clients, fl.local_steps, batch_size)
         batch = {k_: jnp.asarray(v) for k_, v in batch.items()}
-        params, _, metrics = round_step(
-            params, (), batch, weights, jax.random.fold_in(key, 1000 + k)
+        params, opt_state, metrics = round_step(
+            params, opt_state, batch, weights, jax.random.fold_in(key, 1000 + k)
         )
-        total_bits += int(ledger.round_bits(metrics.mask, fl.sampler, fl.n_clients, fl.j_max,
-                                    fl.compression, fl.compression_param))
+        total_bits += int(round_bits(fl, dim, metrics.mask))
         hist.loss.append(float(metrics.loss))
         hist.alpha.append(float(metrics.alpha))
         hist.gamma.append(float(metrics.gamma))

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the compute hot-spots, each with a pure-jnp oracle
 in ref.py and a jitted wrapper in ops.py (interpret=True on CPU):
 
-* flash_attention — causal/sliding-window/prefix-LM, online softmax in VMEM
-* client_norm     — fused per-client update-norm reduction (OCS Alg. 1 line 3)
-* ssd_scan        — chunked Mamba2 SSD with VMEM recurrent-state carry
+* flash_attention    — causal/sliding-window/prefix-LM, online softmax in VMEM
+* client_norm        — fused per-client update-norm reduction (OCS Alg. 1 line 3)
+* masked_aggregate   — fused masked scale-&-aggregate (OCS estimator, Eq. 2):
+                       sum_i mask_i * (w_i/p_i) * U_i in one HBM pass
+* ssd_scan           — chunked Mamba2 SSD with VMEM recurrent-state carry
 """
 
 from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""Fused masked scale-&-aggregate — the OCS estimator's cross-client sum
+(paper Eq. 2): ``G = sum_i mask_i * (w_i / p_i) * U_i``.
+
+The naive jnp lowering materialises the scaled per-client matrix
+``scale[:, None] * U`` (another ``(n, D)`` HBM tensor, written and re-read)
+before the client-axis reduction.  This kernel streams ``(clients, chunk)``
+tiles HBM->VMEM and contracts the client axis in-register: each grid step
+reads one tile, multiplies by the per-client scale vector (zero for unsampled
+clients, so masking is folded into the contraction) and writes one ``(chunk,)``
+slice of the aggregate — a single pass over HBM, no scaled intermediate.
+
+Paired with ``client_norm.client_sqnorms_pallas`` this makes the whole OCS
+critical path (norms -> probabilities -> masked aggregate) single-pass over
+the update matrix.
+
+Grid: (num_chunks,).  Blocks: updates ``(C, CHUNK)`` tile of the ``(C, D)``
+client-major matrix; the ``(C,)`` scale vector maps to the same block every
+step (it stays resident in VMEM); output block ``(CHUNK,)`` at chunk ``i``.
+The contraction itself is a ``(C,) @ (C, CHUNK)`` matvec — MXU-friendly on
+TPU, and each output element is touched by exactly one grid step so no
+cross-step accumulation is needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_agg_kernel(s_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(
+        s, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def masked_scale_aggregate_pallas(
+    updates: jax.Array, scale: jax.Array, chunk: int = 4096, interpret: bool = False
+) -> jax.Array:
+    """updates: (clients, D), scale: (clients,) -> (D,) f32 aggregate.
+
+    D is padded to a multiple of ``chunk`` by the wrapper in ops.py.
+    """
+    c, d = updates.shape
+    assert scale.shape == (c,), (scale.shape, c)
+    assert d % chunk == 0, (d, chunk)
+    grid = (d // chunk,)
+    return pl.pallas_call(
+        _masked_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c, chunk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((chunk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(scale, updates)

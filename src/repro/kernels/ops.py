@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.client_norm import client_sqnorms_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.masked_aggregate import masked_scale_aggregate_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -33,13 +34,82 @@ def client_sqnorms(updates: jax.Array, chunk: int = 4096, interpret: bool | None
     return client_sqnorms_pallas(updates, chunk=chunk, interpret=interpret)
 
 
-def tree_client_norms(updates_tree, weights, chunk: int = 4096, interpret=None):
-    """Kernel-backed equivalent of repro.core.ocs.client_norms."""
+def tree_to_client_matrix(updates_tree) -> jax.Array:
+    """Client-major ``(n, D)`` matrix of a pytree of ``(n, ...)`` leaves.
+
+    One concatenated copy, in ``tree_leaves`` order — the canonical layout
+    both client-axis kernels (sqnorms, masked aggregate) stream, and the one
+    ``client_matrix_to_tree`` inverts.  All tree<->matrix conversions in the
+    repo must go through this pair so the layouts cannot diverge.
+    """
     leaves = jax.tree_util.tree_leaves(updates_tree)
     n = leaves[0].shape[0]
-    flat = jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+    return jnp.concatenate([l.reshape(n, -1) for l in leaves], axis=1)
+
+
+def client_matrix_to_tree(vec: jax.Array, like_tree, strip_client_axis: bool,
+                          keep_dtype: bool = False):
+    """Split a flat ``(D,)`` vector back into ``like_tree``'s leaf layout.
+
+    ``strip_client_axis``: leaves of ``like_tree`` carry a leading client axis
+    not present in ``vec`` (i.e. ``vec`` is one aggregated row).  ``keep_dtype``
+    casts each output leaf to its template leaf's dtype (else ``vec``'s dtype).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    out, off = [], 0
+    for leaf in leaves:
+        shape = leaf.shape[1:] if strip_client_axis else leaf.shape
+        size = leaf[0].size if strip_client_axis else leaf.size
+        piece = vec[off:off + size].reshape(shape)
+        out.append(piece.astype(leaf.dtype) if keep_dtype else piece)
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_client_norms(updates_tree, weights, chunk: int = 4096, interpret=None):
+    """Kernel-backed equivalent of repro.core.ocs.client_norms."""
+    flat = tree_to_client_matrix(updates_tree)
     sq = client_sqnorms(flat, chunk=chunk, interpret=interpret)
     return weights.astype(jnp.float32) * jnp.sqrt(sq)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def masked_scale_aggregate(updates: jax.Array, scale: jax.Array, chunk: int = 4096,
+                           interpret: bool | None = None):
+    """(clients, D), (clients,) -> (D,) f32 fused ``sum_i scale_i * U_i``.
+
+    ``scale`` already folds the Bernoulli mask and the ``w_i / p_i`` OCS
+    reweighting (zero for unsampled clients), so this is the whole masked
+    aggregation in one HBM pass — no scaled ``(clients, D)`` intermediate.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    c, d = updates.shape
+    chunk = min(chunk, max(d, 1))
+    pad = (-d) % chunk
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    out = masked_scale_aggregate_pallas(updates, scale, chunk=chunk, interpret=interpret)
+    return out[:d]
+
+
+def tree_masked_aggregate(updates_tree, scale, chunk: int = 4096, interpret=None):
+    """Kernel-backed masked aggregate over a pytree of (n, ...) leaves.
+
+    Concatenates the tree into the client-major ``(n, D)`` matrix (the same
+    layout ``tree_client_norms`` streams), runs the fused kernel, and splits
+    the result back to the leaf shapes (cast to each leaf's dtype).
+
+    Note the concatenate is itself one unscaled ``(n, D)`` copy: the kernel's
+    single-pass / no-scaled-intermediate property holds for the flat matrix
+    it streams, so the full win needs updates kept in that layout end-to-end
+    (the ROADMAP's sharded-aggregation item); for an arbitrary pytree this
+    wrapper trades the *scaled* intermediate for an unscaled one.
+    """
+    flat = tree_to_client_matrix(updates_tree)
+    agg = masked_scale_aggregate(flat, scale, chunk=chunk, interpret=interpret)
+    return client_matrix_to_tree(agg, updates_tree, strip_client_axis=True,
+                                 keep_dtype=True)
 
 
 @partial(jax.jit, static_argnames=("window", "prefix", "block_q", "block_k", "interpret"))

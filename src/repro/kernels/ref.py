@@ -11,6 +11,12 @@ def client_sqnorms_ref(updates):
     return jnp.sum(x * x, axis=-1)
 
 
+def masked_scale_aggregate_ref(updates, scale):
+    """(clients, D), (clients,) -> (D,) f32: sum_i scale_i * updates_i."""
+    x = updates.astype(jnp.float32)
+    return jnp.sum(x * scale.astype(jnp.float32)[:, None], axis=0)
+
+
 def flash_attention_ref(q, k, v, *, window=None, prefix=0):
     """(BH, S, d) causal attention with optional sliding window / prefix."""
     bh, s, d = q.shape

@@ -18,8 +18,7 @@ import numpy as np
 from repro.checkpoint import save
 from repro.configs import get
 from repro.configs.base import FLConfig
-from repro.core.bits import BitsLedger
-from repro.fl.round import client_weights, make_round
+from repro.fl.round import client_weights, make_round, round_bits
 from repro.models import build_model
 
 
@@ -67,7 +66,6 @@ def main():
           f"sampler={fl.sampler}")
     step = jax.jit(make_round(model.loss, fl))
     w = client_weights(fl)
-    ledger = BitsLedger(dim)
     rng = np.random.default_rng(0)
     total_bits = 0
     for k in range(args.rounds):
@@ -76,7 +74,7 @@ def main():
         t0 = time.time()
         params, _, m = step(params, (), batch, w, jax.random.fold_in(key, k))
         loss = float(m.loss)
-        total_bits += ledger.round_bits(m.mask, fl.sampler, fl.n_clients, fl.j_max)
+        total_bits += round_bits(fl, dim, m.mask)
         print(f"[round {k:3d}] loss {loss:.4f} alpha {float(m.alpha):.3f} "
               f"gamma {float(m.gamma):.3f} sent {int(m.sent_clients)}/{fl.n_clients} "
               f"bits {total_bits/1e9:.2f}G ({time.time()-t0:.1f}s)")

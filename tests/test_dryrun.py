@@ -10,6 +10,9 @@ import sys
 
 import pytest
 
+# ~8 min on CPU (512-device dry-run subprocess): nightly CI only
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 
 

@@ -53,6 +53,7 @@ def test_flash_attention_bf16():
     )
 
 
+@pytest.mark.slow
 def test_flash_matches_model_chunked_attention():
     """The Pallas kernel and the portable XLA chunked path agree (same oracle)."""
     from repro.models.layers import chunked_attention
@@ -90,6 +91,7 @@ def test_ssd_scan_sweep(s, chunk, p, n):
     np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=2e-5)
 
 
+@pytest.mark.slow
 def test_ssd_kernel_matches_model_ssm():
     """The Pallas SSD kernel reproduces the model's apply_mamba2 core math."""
     from repro.configs import get

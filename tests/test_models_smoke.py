@@ -12,6 +12,9 @@ from repro.configs.base import FLConfig
 from repro.fl.round import client_weights, make_round
 from repro.models import build_model
 
+# ~80s of CPU smokes across 10 archs: nightly CI only (tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = sorted(ARCHS)
 
 

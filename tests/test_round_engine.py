@@ -1,0 +1,205 @@
+"""Round-engine parity: the (vmap | scan) x (jnp | pallas) matrix produces
+bitwise-identical sampling decisions and allclose aggregates for the same
+round key — including the configs the old scan path silently dropped
+(compression, partial availability) — plus the fused masked-aggregate kernel
+vs its oracle and the unified round_bits accounting."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import ocs
+from repro.core.bits import BitsLedger
+from repro.fl.engine import RoundEngine
+from repro.fl.round import client_weights, make_round, round_bits
+from repro.kernels import ops, ref
+from repro.models.simple import mlp_classifier
+
+COMBOS = list(itertools.product(["vmap", "scan"], ["jnp", "pallas"]))
+
+
+def _workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
+    init, loss, _ = mlp_classifier(din, classes, hidden=8)
+    rng = np.random.default_rng(seed)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(n, steps, b, din)).astype("float32")),
+        "y": jnp.asarray(rng.integers(0, classes, (n, steps, b)).astype("int32")),
+    }
+    return init, loss, batch
+
+
+@pytest.mark.parametrize(
+    "fl_kw",
+    [
+        {},
+        {"compression": "randk", "compression_param": 0.5},
+        {"compression": "qsgd", "compression_param": 8},
+        {"availability": 0.7},
+        {"compression": "randk", "compression_param": 0.5, "availability": 0.7},
+    ],
+    ids=["plain", "randk", "qsgd", "avail", "randk+avail"],
+)
+def test_engine_matrix_parity(fl_kw):
+    """Same key => identical norms/probs/mask and allclose params across all
+    four engine combinations (acceptance criterion of the engine refactor)."""
+    init, loss, batch = _workload()
+    fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
+                  lr_local=0.1, **fl_kw)
+    params = init(jax.random.PRNGKey(0))
+    w = client_weights(fl)
+    key = jax.random.PRNGKey(7)
+    outs = {}
+    for mem, be in COMBOS:
+        step = jax.jit(
+            RoundEngine(loss, fl, memory=mem, backend=be, scan_group=4).make_step()
+        )
+        outs[(mem, be)] = step(params, (), batch, w, key)
+    p_ref, _, m_ref = outs[("vmap", "jnp")]
+    assert int(jnp.sum(m_ref.mask)) > 0  # the round actually sampled someone
+    for combo, (p2, _, m2) in outs.items():
+        assert np.array_equal(np.asarray(m_ref.mask), np.asarray(m2.mask)), combo
+        np.testing.assert_allclose(
+            np.asarray(m_ref.norms), np.asarray(m2.norms), atol=1e-6, err_msg=str(combo)
+        )
+        np.testing.assert_allclose(
+            np.asarray(m_ref.probs), np.asarray(m2.probs), atol=1e-6, err_msg=str(combo)
+        )
+        for a, b in zip(jax.tree_util.tree_leaves(p_ref), jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-5, err_msg=str(combo)
+            )
+
+
+def test_engine_matrix_parity_server_opt():
+    """A stateful server optimizer composes identically on every path."""
+    from repro.optim import sgd
+
+    init, loss, batch = _workload()
+    fl = FLConfig(n_clients=8, expected_clients=3, sampler="optimal", local_steps=2,
+                  lr_local=0.1)
+    params0 = init(jax.random.PRNGKey(0))
+    w = client_weights(fl)
+    key = jax.random.PRNGKey(11)
+    finals = []
+    for mem, be in COMBOS:
+        opt = sgd(0.5, momentum=0.9)
+        step = jax.jit(
+            RoundEngine(loss, fl, opt, memory=mem, backend=be, scan_group=2).make_step()
+        )
+        params, state = params0, opt.init(params0)
+        for k in range(3):
+            params, state, _ = step(params, state, batch, w,
+                                    jax.random.fold_in(key, k))
+        finals.append(params)
+    for p2 in finals[1:]:
+        for a, b in zip(
+            jax.tree_util.tree_leaves(finals[0]), jax.tree_util.tree_leaves(p2)
+        ):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_engine_config_driven_selection():
+    """FLConfig.round_engine / agg_backend alone select the path (trainer wiring)."""
+    init, loss, batch = _workload()
+    key = jax.random.PRNGKey(3)
+    outs = []
+    for mem, be in COMBOS:
+        fl = FLConfig(n_clients=8, expected_clients=3, local_steps=2, lr_local=0.1,
+                      round_engine=mem, agg_backend=be, scan_group=4)
+        params = init(jax.random.PRNGKey(0))
+        step = jax.jit(make_round(loss, fl))
+        outs.append(step(params, (), batch, client_weights(fl), key))
+    for p2, _, m2 in outs[1:]:
+        assert np.array_equal(np.asarray(outs[0][2].mask), np.asarray(m2.mask))
+        for a, b in zip(jax.tree_util.tree_leaves(outs[0][0]), jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_engine_rejects_bad_config():
+    init, loss, _ = _workload()
+    fl = FLConfig(n_clients=8, expected_clients=3)
+    with pytest.raises(ValueError, match="memory policy"):
+        RoundEngine(loss, fl, memory="pmap")
+    with pytest.raises(ValueError, match="aggregation backend"):
+        RoundEngine(loss, fl, backend="cuda")
+    with pytest.raises(ValueError, match="scan_group"):
+        RoundEngine(loss, fl, memory="scan", scan_group=3)
+
+
+@pytest.mark.parametrize("clients", [1, 3, 8])
+@pytest.mark.parametrize("d,chunk", [(64, 16), (1000, 128), (4096, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_aggregate_kernel_sweep(clients, d, chunk, dtype):
+    key = jax.random.PRNGKey(clients * d)
+    x = (jax.random.normal(key, (clients, d)) * 3).astype(dtype)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.6, (clients,))
+    scale = jnp.where(mask, jax.random.uniform(jax.random.fold_in(key, 2), (clients,)) * 4, 0.0)
+    got = ops.masked_scale_aggregate(x, scale, chunk=chunk, interpret=True)
+    want = ref.masked_scale_aggregate_ref(x, scale)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_sample_and_aggregate_pallas_backend():
+    """core entry point: backend='pallas' matches the jnp aggregation and
+    reuses precomputed norms without re-deriving the plan."""
+    key = jax.random.PRNGKey(5)
+    upd = {
+        "a": jax.random.normal(key, (6, 3, 5)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (6, 17)),
+    }
+    w = jnp.full((6,), 1 / 6)
+    r_jnp = ocs.sample_and_aggregate(upd, w, 3, key, sampler="optimal")
+    r_pal = ocs.sample_and_aggregate(
+        upd, w, 3, key, sampler="optimal", backend="pallas", interpret=True
+    )
+    assert np.array_equal(np.asarray(r_jnp.mask), np.asarray(r_pal.mask))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(r_jnp.aggregate),
+        jax.tree_util.tree_leaves(r_pal.aggregate),
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    # precomputed-norm reuse: passing the kernel's norms changes nothing
+    norms = ops.tree_client_norms(upd, w, chunk=16, interpret=True)
+    r_pre = ocs.sample_and_aggregate(upd, w, 3, key, sampler="optimal", norms=norms)
+    np.testing.assert_allclose(
+        np.asarray(r_pre.probs), np.asarray(r_jnp.probs), atol=1e-6
+    )
+
+
+def test_round_bits_charges_compression():
+    """Regression: round_bits must forward the config's compression to the
+    ledger (an earlier version dropped it, overbilling compressed rounds)."""
+    dim = 10_000
+    mask = jnp.asarray([True, False, True, True])
+    fl = FLConfig(n_clients=4, expected_clients=3, sampler="aocs", j_max=4,
+                  compression="randk", compression_param=0.05)
+    got = round_bits(fl, dim, mask)
+    want = BitsLedger(dim).round_bits(
+        mask, "aocs", 4, 4, "randk", 0.05
+    )
+    assert got == want
+    uncompressed = round_bits(
+        FLConfig(n_clients=4, expected_clients=3, sampler="aocs", j_max=4), dim, mask
+    )
+    assert got < 0.2 * uncompressed  # the discount is actually applied
+
+
+def test_trainer_bills_compressed_rounds():
+    """End-to-end: run_training's cumulative bits reflect compression."""
+    from repro.data import femnist_like
+    from repro.fl.trainer import run_training
+
+    ds = femnist_like(dataset_id=1, n_clients=16, seed=0)
+    init, loss, _ = mlp_classifier(ds.input_dim, ds.num_classes, hidden=8)
+    kw = dict(rounds=2, batch_size=8, seed=3)
+    fl_plain = FLConfig(n_clients=8, expected_clients=3, local_steps=2)
+    fl_comp = FLConfig(n_clients=8, expected_clients=3, local_steps=2,
+                       compression="randk", compression_param=0.05)
+    _, h_plain = run_training(ds, init, loss, fl_plain, **kw)
+    _, h_comp = run_training(ds, init, loss, fl_comp, **kw)
+    assert 0 < h_comp.bits[-1] < h_plain.bits[-1]
