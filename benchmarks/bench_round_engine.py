@@ -1,13 +1,17 @@
 """Round-engine matrix microbenchmark: µs/round for every (memory policy x
 aggregation backend) combination of fl.engine.RoundEngine on the
-FEMNIST-shaped workload, plus a compression variant — the numbers that decide
-which engine the trainer should default to on a given platform.
+FEMNIST-shaped workload, plus a compression variant and the shard_map round
+(clients sharded over a 1-D data mesh spanning every local device, both agg
+backends) — the numbers that decide which engine the trainer should default
+to on a given platform.
 
 On this CPU container the pallas backend runs in interpret mode, so its
 wall-clock is a correctness proxy only (the artifact records the mode); on a
 TPU the same harness times the compiled kernels.
 
-Artifact: benchmarks/artifacts/round_engine.json
+Artifact: benchmarks/artifacts/round_engine.json (schema 2 — see
+docs/architecture.md for the field contract; schema 1 lacked the ``schema``
+field and the ``shard+*`` combos).
 """
 
 from __future__ import annotations
@@ -56,12 +60,15 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0):
     params = init(jax.random.fold_in(key, 1))
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
 
+    n_dev = jax.device_count()
     results = {
+        "schema": 2,
         "workload": {
             "n_clients": n, "expected_clients": m, "local_steps": local_steps,
             "batch_size": batch_size, "model_dim": dim, "reps": reps,
             "backend_platform": jax.default_backend(),
             "pallas_interpret": jax.default_backend() != "tpu",
+            "mesh_devices": n_dev,
         },
         "combos": {},
     }
@@ -93,6 +100,38 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0):
         # the matrix is only comparable if every combo made the same decisions
         ref = masks[("vmap", "jnp")]
         assert all(np.array_equal(ref, v) for v in masks.values()), "mask divergence"
+
+    # shard_map round (explicit collectives) over every local device; the
+    # shard path has no compression axis, so it joins the 'none' matrix only.
+    if n % max(n_dev, 1) == 0:
+        from repro.fl.shard_round import make_shard_map_round
+
+        fl = FLConfig(
+            n_clients=n, expected_clients=m, sampler="aocs",
+            local_steps=local_steps, lr_local=0.125,
+        )
+        weights = client_weights(fl)
+        mesh = jax.make_mesh((n_dev,), (fl.client_axis,))
+        for be in ("jnp", "pallas"):
+            fl_be = FLConfig(
+                n_clients=n, expected_clients=m, sampler="aocs",
+                local_steps=local_steps, lr_local=0.125, agg_backend=be,
+            )
+            step = jax.jit(make_shard_map_round(loss, fl_be, mesh))
+            us, (_, _, metrics) = _time_step(step, params, batch, weights, key, reps)
+            tag = f"shard+{be}"
+            csv_line(
+                f"round_engine_{tag}", us,
+                f"sent={int(metrics.mask.sum())};loss={float(metrics.loss):.4f}",
+            )
+            results["combos"][tag] = {
+                "us_per_round": us,
+                "memory": "shard",
+                "backend": be,
+                "compression": "none",
+                "mesh_axis_size": n_dev,
+                "sent_clients": int(metrics.mask.sum()),
+            }
 
     with open(os.path.join(ART, "round_engine.json"), "w") as f:
         json.dump(results, f, indent=2)

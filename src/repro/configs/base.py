@@ -218,3 +218,8 @@ class FLConfig:
     round_engine: str = "vmap"     # memory policy: vmap | scan (two-pass OCS)
     agg_backend: str = "jnp"       # masked-aggregate backend: jnp | pallas
     scan_group: int = 2            # clients per scan group (round_engine='scan')
+    # mesh execution (fl/shard_round.py, selected by fl.engine.make_engine
+    # when a mesh is active): the mesh axis the client dimension shards over.
+    # agg_backend applies on this path too — 'pallas' runs the per-shard
+    # fused kernel (kernels/sharded_aggregate.py) + one cross-shard psum.
+    client_axis: str = "data"

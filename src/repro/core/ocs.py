@@ -30,6 +30,8 @@ AGG_BACKENDS = ("jnp", "pallas")
 
 
 class OCSResult(NamedTuple):
+    """One OCS round's outputs: Eq. 2's aggregate plus the sampling record."""
+
     aggregate: Any          # pytree, same structure as one client's update
     probs: jax.Array        # (n,) inclusion probabilities
     mask: jax.Array         # (n,) realized Bernoulli participation
@@ -87,10 +89,20 @@ def sampling_plan(
 ) -> SamplingPlan:
     """Norms -> probabilities -> Bernoulli mask -> estimator coefficients.
 
+    The master's entire per-round decision, from the ``(n,)`` norm vector
+    alone: inclusion probabilities ``p_i`` (Eq. 7 exact via
+    ``sampler='optimal'``, Alg. 2 approximate via ``'aocs'``), the
+    independent Bernoulli participation draw (Alg. 1 line 5), partial
+    availability (Appendix E, when ``availability < 1``), the improvement
+    factors alpha/gamma (Defs. 11/12), and the per-client estimator
+    coefficient ``scale_i = mask_i * w_i / (p_i * q)`` that turns Eq. 2 into
+    the single contraction ``sum_i scale_i U_i`` for any backend.
+
     Deterministic in ``key``: the availability split (taken iff
     ``availability < 1``) and the participation draw consume the key in a
     fixed order, so two engines fed the same norms and key produce bitwise
-    identical masks — the property the engine-parity tests gate on.
+    identical masks — the property the engine-parity tests gate on (see
+    docs/paper_map.md for the full contract).
     """
     fn = sampling.SAMPLERS[sampler] if isinstance(sampler, str) else sampler
     u = jnp.asarray(norms)
@@ -135,12 +147,17 @@ def aggregate_updates(
 ) -> Any:
     """``sum_i scale_i * U_i`` over the leading client axis of every leaf.
 
+    The heavy half of Eq. 2: with ``scale`` from :func:`sampling_plan` this
+    IS the unbiased masked aggregate ``G = sum_i mask_i (w_i/p_i) U_i``.
+
     backend='jnp': portable tree-map contraction (XLA materialises the scaled
     per-client intermediate).  backend='pallas': the fused masked
     scale-&-aggregate kernel — single pass over the client-major matrix with
     no scaled intermediate; for a pytree input the wrapper first concatenates
     the leaves into that matrix (see ops.tree_masked_aggregate's note on the
-    cost of that copy).
+    cost of that copy).  Under an active mesh, the shard_map round uses the
+    mesh-native form instead (ops.tree_shard_masked_aggregate: per-shard
+    kernel + one cross-shard psum) — see docs/architecture.md.
     """
     if backend == "jnp":
         n = scale.shape[0]

@@ -1,6 +1,6 @@
 """Federated runtime: round engine, trainer, client-pool utilities."""
 
-from repro.fl.engine import RoundEngine, RoundMetrics  # noqa: F401
+from repro.fl.engine import RoundEngine, RoundMetrics, make_engine  # noqa: F401
 from repro.fl.round import (  # noqa: F401
     client_weights,
     make_local_update,

@@ -13,17 +13,24 @@ under two orthogonal execution axes.
     scaled aggregate.  Live memory drops from O(n*d) to O(scan_group*d) at
     the price of computing local updates twice.
 
-* **aggregation backend** — how ``sum_i mask_i * (w_i/p_i) * U_i`` is
-  contracted: ``'jnp'`` (portable tree-map) or ``'pallas'`` (the fused
-  streaming kernel in kernels/masked_aggregate.py — single HBM pass, no
-  scaled per-client intermediate).
+* **aggregation backend** — how Eq. 2's masked aggregate
+  ``G = sum_i mask_i * (w_i/p_i) * U_i`` is contracted: ``'jnp'`` (portable
+  tree-map) or ``'pallas'`` (the fused streaming kernel in
+  kernels/masked_aggregate.py — single HBM pass, no scaled per-client
+  intermediate).
 
-All four combinations have full feature parity — unbiased compression,
-partial availability (Appendix E), server optimizer — and are deterministic
-in the round key: the key splits (compression keys, availability draw,
-participation draw) happen in one fixed order via ``ocs.sampling_plan``, so
-the same key yields bitwise identical masks on every path (gated by
-tests/test_round_engine.py).
+A third, orthogonal choice is the **mesh**: when one is active,
+:func:`make_engine` selects the shard_map round (fl/shard_round.py) — the
+client dimension shards over ``fl.client_axis``, and the same ``agg_backend``
+axis applies per shard (``'pallas'`` = the mesh-native kernel in
+kernels/sharded_aggregate.py + one cross-shard psum).
+
+All four single-device combinations have full feature parity — unbiased
+compression, partial availability (Appendix E), server optimizer — and are
+deterministic in the round key: the key splits (compression keys,
+availability draw, participation draw) happen in one fixed order via
+``ocs.sampling_plan``, so the same key yields bitwise identical masks on
+every path (gated by tests/test_round_engine.py).
 
 Layout: every ``batch`` leaf is shaped ``(n_clients, local_steps, b, ...)``;
 the client axis is sharded over the ``('pod','data')`` mesh axes under pjit,
@@ -49,6 +56,8 @@ MEMORY_POLICIES = ("vmap", "scan")
 
 
 class RoundMetrics(NamedTuple):
+    """Per-round observables: loss, alpha/gamma (Defs. 11/12), probs/mask."""
+
     loss: jax.Array
     alpha: jax.Array
     gamma: jax.Array
@@ -99,15 +108,52 @@ def make_local_update(loss_fn: Callable, fl: FLConfig):
     return fedavg_update if fl.algorithm == "fedavg" else dsgd_update
 
 
+def make_engine(loss_fn: Callable, fl: FLConfig, server_opt=None, *,
+                mesh=None, client_axis: str | None = None,
+                interpret: bool | None = None) -> Callable:
+    """Mesh-aware round-step factory: THE entry point callers should use.
+
+    Returns ``round_step(params, opt_state, batch, weights, key)``:
+
+    * ``mesh=None`` — the single-device/GSPMD :class:`RoundEngine`, configured
+      by ``fl.round_engine`` x ``fl.agg_backend`` (x ``fl.scan_group``).
+    * ``mesh`` active — the explicit-collective shard_map round
+      (fl/shard_round.py): clients shard over ``client_axis`` (default
+      ``fl.client_axis``), norms travel as an all_gather of scalars (Alg. 2),
+      and Eq. 2's aggregate honours ``fl.agg_backend`` (``'pallas'`` = the
+      per-shard fused kernel + one cross-shard psum).
+
+    The shard path models the master update as plain ``lr_global`` SGD
+    (Alg. 3), so a stateful ``server_opt`` is only supported without a mesh;
+    likewise a compressing config is rejected there (clients would have to
+    compress before reporting norms).  Partial availability (Appendix E) IS
+    supported on every path — the shard body calls the same
+    ``ocs.sampling_plan``.
+    """
+    if mesh is None:
+        return RoundEngine(loss_fn, fl, server_opt, interpret=interpret).make_step()
+    if server_opt is not None:
+        raise ValueError("server_opt is not supported on the shard_map path")
+    from repro.fl.shard_round import make_shard_map_round
+
+    return make_shard_map_round(
+        loss_fn, fl, mesh, client_axis=client_axis, interpret=interpret
+    )
+
+
 class RoundEngine:
     """Builds the jit-able ``round_step`` for one (memory, backend) pair.
 
     ``round_step(params, opt_state, batch, weights, key) ->
-    (params, opt_state, RoundMetrics)``.
+    (params, opt_state, RoundMetrics)`` — one communication round of
+    Algorithm 3: local updates, norms ``u_i = ||w_i U_i||`` (Alg. 1 line 3),
+    probabilities ``p_i`` (Eq. 7 exact / Alg. 2 approximate), independent
+    Bernoulli participation, and the unbiased masked aggregate (Eq. 2).
 
     Defaults come from the config (``fl.round_engine`` / ``fl.agg_backend`` /
     ``fl.scan_group``); keyword arguments override per-instance so benchmarks
-    can sweep the matrix without minting configs.
+    can sweep the matrix without minting configs.  For mesh-aware selection
+    use :func:`make_engine`.
     """
 
     def __init__(

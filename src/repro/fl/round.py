@@ -16,6 +16,7 @@ from repro.core.bits import BitsLedger
 from repro.fl.engine import (  # noqa: F401  (re-exported stable API)
     RoundEngine,
     RoundMetrics,
+    make_engine,
     make_local_update,
 )
 

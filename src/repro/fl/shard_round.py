@@ -4,7 +4,9 @@ inference.
 The pjit/GSPMD round (repro.fl.round) lets XLA choose the collectives; this
 variant spells the paper's communication pattern out with jax.lax primitives,
 which (a) documents exactly which collective each protocol step is, and
-(b) gives §Perf a hand-scheduled baseline to compare GSPMD against:
+(b) gives §Perf a hand-scheduled baseline to compare GSPMD against.
+The same table lives in docs/architecture.md (kept in sync by the CI docs
+job):
 
   step                              collective (axis = clients)
   ------------------------------   ---------------------------
@@ -16,6 +18,19 @@ which (a) documents exactly which collective each protocol step is, and
 Each mesh shard owns ``n_clients / axis_size`` clients; model dims stay
 un-sharded inside the shard_map body (suitable for the small/medium models
 the paper trains; the GSPMD path is the one that scales to the 777B configs).
+
+The final aggregate honours ``fl.agg_backend`` — the same jnp | pallas axis
+as :class:`repro.fl.engine.RoundEngine`:
+
+* ``'jnp'``   — per-leaf local contraction, one psum per leaf (portable
+  tree-map baseline).
+* ``'pallas'`` — the mesh-native fused kernel
+  (kernels/sharded_aggregate.py): each shard streams its LOCAL ``(k, D)``
+  client block through one tile stream, then a SINGLE cross-shard psum of the
+  ``(D,)`` partial finishes Eq. 2.  No replicated ``(n, D)`` flatten exists
+  anywhere — the only client-major buffer is the block the shard already
+  owns, which makes the paper's uplink (scalars up, one partial sum per
+  shard) literal in the kernel schedule.
 """
 
 from __future__ import annotations
@@ -27,13 +42,35 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FLConfig
-from repro.core import sampling
+from repro.core import ocs
 from repro.fl.round import RoundMetrics, make_local_update
+from repro.kernels import ops as kops
 
 
-def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str = "data"):
+def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = None,
+                         interpret: bool | None = None):
     """Returns round_step(params, opt_state, batch, weights, key) with the
-    client dimension sharded over ``client_axis`` of ``mesh``."""
+    client dimension sharded over ``client_axis`` of ``mesh``.
+
+    ``client_axis`` defaults to ``fl.client_axis``; ``fl.agg_backend``
+    selects the aggregation path (see module docstring), and ``interpret``
+    forwards to the pallas kernel (backend-detected when None).
+
+    The sampling math itself is NOT re-implemented here: the body gathers the
+    scalar norms and weights and calls ``ocs.sampling_plan`` — the same single
+    copy of probabilities/mask/scale (incl. Appendix E availability) every
+    single-device path uses, which is what keeps masks bitwise identical
+    across the mesh boundary.  Unbiased compression is a single-device-engine
+    feature today (clients would have to compress before reporting norms), so
+    a compressing config is rejected rather than silently ignored.
+    """
+    if client_axis is None:
+        client_axis = fl.client_axis
+    if fl.compression != "none":
+        raise ValueError(
+            "compression is not supported on the shard_map path yet; use the "
+            "single-device RoundEngine (fl.round_engine) for compressed rounds"
+        )
     local_update = make_local_update(loss_fn, fl)
     axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
     assert fl.n_clients % axis_size == 0, (fl.n_clients, axis_size)
@@ -55,48 +92,47 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str = "data")
         u_local = weights.astype(jnp.float32) * jnp.sqrt(sq)
 
         # Algorithm 2's aggregation: the master only ever sees sums/gathers of
-        # scalars — here an all_gather of one float per client.
+        # scalars — here an all_gather of one float per client (norms and
+        # weights), after which every shard runs the replicated sampling plan.
         u_all = jax.lax.all_gather(u_local, client_axis, tiled=True)     # (n,)
-        fn = sampling.SAMPLERS[fl.sampler]
-        p_all = (
-            fn(u_all, fl.expected_clients, fl.j_max)
-            if fl.sampler == "aocs"
-            else fn(u_all, fl.expected_clients)
+        w_all = jax.lax.all_gather(weights, client_axis, tiled=True)     # (n,)
+        # same key discipline as RoundEngine (k_sample = first half of the
+        # round-key split into sampling_plan), so the same round key draws
+        # bitwise-identical masks here and on the single-device paths — the
+        # property the cross-path parity tests gate on.
+        k_sample, _ = jax.random.split(key)
+        plan = ocs.sampling_plan(
+            u_all, w_all, fl.expected_clients, k_sample,
+            sampler=fl.sampler, j_max=fl.j_max, availability=fl.availability,
         )
-        mask_all = jax.random.bernoulli(key, jnp.clip(p_all, 0, 1), p_all.shape)
 
         idx = jax.lax.axis_index(client_axis)
         k = weights.shape[0]
         sl = lambda x: jax.lax.dynamic_slice_in_dim(x, idx * k, k)
-        p_local, mask_local = sl(p_all), sl(mask_all)
-        scale = jnp.where(
-            mask_local & (p_local > 1e-12),
-            weights / jnp.maximum(p_local, 1e-12),
-            0.0,
-        )
+        scale = sl(plan.scale)
 
-        # client -> master: psum of the scaled updates over the client axis
-        def agg(leaf):
-            s = scale.reshape((k,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
-            return jax.lax.psum(
-                jnp.sum(leaf.astype(jnp.float32) * s, axis=0), client_axis
+        # client -> master (Eq. 2): the cross-shard sum of scaled updates.
+        if fl.agg_backend == "pallas":
+            # fused per-shard kernel over the local (k, D) block + ONE psum.
+            aggregate = kops.tree_shard_masked_aggregate(
+                updates, scale, axis_name=client_axis, interpret=interpret,
             )
+        else:
+            # portable baseline: per-leaf contraction, psum per leaf.
+            def agg(leaf):
+                s = scale.reshape((k,) + (1,) * (leaf.ndim - 1))
+                return jax.lax.psum(
+                    jnp.sum(leaf.astype(jnp.float32) * s, axis=0), client_axis
+                )
 
-        aggregate = jax.tree_util.tree_map(agg, updates)
+            aggregate = jax.tree_util.tree_map(agg, updates)
         new_params = jax.tree_util.tree_map(
             lambda pp, gg: (pp - fl.lr_global * gg).astype(pp.dtype), params, aggregate
         )
         loss = jax.lax.pmean(jnp.mean(losses), client_axis)
-        return new_params, (loss, u_all, p_all, mask_all)
+        return new_params, (loss, plan.norms, plan.probs, plan.mask)
 
-    # jax >= 0.6 exposes shard_map at top level (replication check renamed to
-    # check_vma); earlier versions ship it under jax.experimental.
-    if hasattr(jax, "shard_map"):
-        _shard_map, _check = jax.shard_map, {"check_vma": False}
-    else:
-        from jax.experimental.shard_map import shard_map as _shard_map
-
-        _check = {"check_rep": False}
+    _shard_map, _check = kops.get_shard_map()
     shard_fn = _shard_map(
         body,
         mesh=mesh,

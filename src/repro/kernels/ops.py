@@ -1,8 +1,21 @@
 """Jitted public wrappers around the Pallas kernels.
 
-On this CPU container the kernels execute in ``interpret=True`` mode (the
-kernel body runs in Python, validating the exact TPU program); on a real TPU
-set ``interpret=False`` (the default flips on backend detection)."""
+Every wrapper follows one convention set: the trailing model dim is padded to
+a multiple of ``chunk`` (padding rows/columns are zeros, so reductions and
+contractions are unaffected), ``interpret`` defaults to backend detection (on
+this CPU container the kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python, validating the exact TPU program — while on a
+real TPU the compiled kernel runs), and outputs are unpadded before return.
+
+Paper contract (see docs/paper_map.md for the full table):
+
+* ``client_sqnorms`` / ``tree_client_norms`` — Alg. 1 line 3 / Alg. 2 input:
+  ``u_i = ||w_i U_i||``.
+* ``masked_scale_aggregate`` / ``tree_masked_aggregate`` — Eq. 2's masked
+  unbiased aggregate ``G = sum_i mask_i (w_i / p_i) U_i`` on one device.
+* ``shard_masked_aggregate`` / ``sharded_masked_aggregate`` — the same Eq. 2
+  contraction under a mesh: per-shard partial sum + one cross-shard ``psum``.
+"""
 
 from __future__ import annotations
 
@@ -10,15 +23,33 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.client_norm import client_sqnorms_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.masked_aggregate import masked_scale_aggregate_pallas
+from repro.kernels.sharded_aggregate import sharded_masked_aggregate_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def get_shard_map():
+    """(shard_map callable, replication-check-off kwargs) for this jax.
+
+    jax >= 0.6 exposes ``shard_map`` at top level (the replication check is
+    named ``check_vma``); earlier versions ship it under ``jax.experimental``
+    with the check named ``check_rep``.  Shared by every module that builds a
+    shard_map (fl/shard_round.py, the mesh-level wrapper below) so the compat
+    logic exists once.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map, {"check_vma": False}
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map, {"check_rep": False}
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -110,6 +141,90 @@ def tree_masked_aggregate(updates_tree, scale, chunk: int = 4096, interpret=None
     agg = masked_scale_aggregate(flat, scale, chunk=chunk, interpret=interpret)
     return client_matrix_to_tree(agg, updates_tree, strip_client_axis=True,
                                  keep_dtype=True)
+
+
+def shard_masked_aggregate(updates, scale, axis_name: str | None = None,
+                           chunk: int = 4096, block_clients: int = 128,
+                           interpret: bool | None = None):
+    """Shard-local ``(k, D)``, ``(k,)`` -> fully-summed ``(D,)`` f32 aggregate.
+
+    The mesh-native form of Eq. 2, meant to be called INSIDE a ``shard_map``
+    body whose client axis is ``axis_name``: the fused kernel contracts the
+    local client block in one tile stream (kernels/sharded_aggregate.py), then
+    one ``jax.lax.psum`` over ``axis_name`` completes ``sum_i scale_i U_i``
+    across shards — the paper's "one partial sum per shard" uplink, with no
+    replicated ``(n, D)`` materialisation anywhere.  ``axis_name=None`` skips
+    the psum (single-shard / testing use).
+
+    Same chunk/pad/interpret conventions as ``client_sqnorms``: ``D`` pads to
+    a ``chunk`` multiple, the local client count pads to ``block_clients``
+    (padding rows carry zero scale, contributing nothing), ``interpret``
+    defaults by backend detection.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    c, d = updates.shape
+    chunk = min(chunk, max(d, 1))
+    block_clients = min(block_clients, max(c, 1))
+    pad_d = (-d) % chunk
+    pad_c = (-c) % block_clients
+    if pad_d or pad_c:
+        updates = jnp.pad(updates, ((0, pad_c), (0, pad_d)))
+        scale = jnp.pad(scale, (0, pad_c))
+    out = sharded_masked_aggregate_pallas(
+        updates, scale, chunk=chunk, block_clients=block_clients,
+        interpret=interpret,
+    )[:d]
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return out
+
+
+def tree_shard_masked_aggregate(updates_tree, scale, axis_name: str | None = None,
+                                chunk: int = 4096, block_clients: int = 128,
+                                interpret=None):
+    """Eq. 2 over a shard-local pytree of ``(k, ...)`` leaves, inside shard_map.
+
+    Concatenates the LOCAL client block into its ``(k, D)`` client-major
+    matrix (a per-shard copy — never the replicated ``(n, D)`` flatten of
+    ``tree_masked_aggregate``), contracts it through the fused per-shard
+    kernel, psums once over ``axis_name``, and splits the aggregated ``(D,)``
+    row back to the leaf shapes (cast to each leaf's dtype).
+    """
+    flat = tree_to_client_matrix(updates_tree)
+    agg = shard_masked_aggregate(
+        flat, scale, axis_name=axis_name, chunk=chunk,
+        block_clients=block_clients, interpret=interpret,
+    )
+    return client_matrix_to_tree(agg, updates_tree, strip_client_axis=True,
+                                 keep_dtype=True)
+
+
+def sharded_masked_aggregate(updates, scale, mesh, client_axis: str = "data",
+                             chunk: int = 4096, block_clients: int = 128,
+                             interpret: bool | None = None):
+    """Global ``(n, D)``, ``(n,)`` -> ``(D,)`` f32 aggregate under ``mesh``.
+
+    Standalone mesh-level entry point: shard_maps the per-shard kernel over
+    ``client_axis`` (each shard streams only its own ``(n/axis_size, D)``
+    block) and finishes with the single cross-shard psum.  Drop-in replacement
+    for ``masked_scale_aggregate`` when a mesh is active; ``n`` must divide by
+    the axis size (the FL configs guarantee this).
+    """
+    n = updates.shape[0]
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
+    assert n % axis_size == 0, (n, axis_size)
+    smap, check = get_shard_map()
+    fn = partial(
+        shard_masked_aggregate, axis_name=client_axis, chunk=chunk,
+        block_clients=block_clients, interpret=interpret,
+    )
+    return smap(
+        fn, mesh=mesh,
+        in_specs=(P(client_axis), P(client_axis)),
+        out_specs=P(),
+        **check,
+    )(updates, scale)
 
 
 @partial(jax.jit, static_argnames=("window", "prefix", "block_q", "block_k", "interpret"))

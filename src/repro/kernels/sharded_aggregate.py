@@ -1,0 +1,87 @@
+"""Mesh-native masked scale-&-aggregate — the per-shard half of Eq. 2.
+
+Under the ``('pod','data')`` mesh every shard owns a contiguous block of
+``k = n / axis_size`` clients.  The paper's communication pattern (Alg. 2:
+scalars up, then ONE partial sum per shard) maps onto exactly two steps:
+
+  1. a local fused contraction ``partial = sum_{i in shard} scale_i * U_i``
+     over the shard's ``(k, D)`` client block — this kernel;
+  2. a single cross-shard ``jax.lax.psum`` of the ``(D,)`` partials.
+
+Nothing ever materialises the replicated ``(n, D)`` matrix that the
+single-device path's ``ops.tree_masked_aggregate`` concatenates — the only
+client-major buffer is the shard-local block that already lives on the shard.
+
+Kernel schedule
+---------------
+``masked_aggregate.masked_scale_aggregate_pallas`` keeps the WHOLE client
+axis resident in VMEM per tile (fine for the master-side matrices where
+``c`` is the modest sampled-client count).  Here the local block can still be
+large (``n / axis_size`` clients), so the grid gains a client-block axis:
+
+  Grid: ``(num_chunks, num_client_blocks)`` — chunk-major so each output
+  chunk is revisited across the *inner* client-block steps and the f32
+  accumulator stays resident in VMEM.
+  Blocks: updates ``(BC, CHUNK)`` tile; scale ``(BC,)`` slice; output
+  ``(CHUNK,)`` at chunk ``i``, initialised at client-block 0 and accumulated
+  in-place afterwards.
+
+Each (scale-slice) x (tile) product is a ``(BC,) @ (BC, CHUNK)`` matvec —
+MXU-friendly — and masking is folded into the contraction (zero scale for
+unsampled clients), so the shard never writes a scaled per-client
+intermediate: one pass over the local block's HBM, one ``(CHUNK,)`` VMEM
+accumulator per output chunk.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shard_agg_kernel(s_ref, x_ref, o_ref):
+    j = pl.program_id(1)  # client-block step (inner grid axis)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        s, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def sharded_masked_aggregate_pallas(
+    updates: jax.Array,
+    scale: jax.Array,
+    chunk: int = 4096,
+    block_clients: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Local ``(k, D)`` client block -> ``(D,)`` f32 partial aggregate.
+
+    The shard-local half of Eq. 2: ``partial = sum_i scale_i * U_i`` over the
+    clients this shard owns; callers ``psum`` the result over the client mesh
+    axis to finish the estimator.  ``D`` must be a multiple of ``chunk`` and
+    ``k`` a multiple of ``block_clients`` (the wrapper in ops.py pads both —
+    zero-scale padding rows contribute nothing to the sum).
+    """
+    c, d = updates.shape
+    assert scale.shape == (c,), (scale.shape, c)
+    assert d % chunk == 0, (d, chunk)
+    assert c % block_clients == 0, (c, block_clients)
+    grid = (d // chunk, c // block_clients)
+    return pl.pallas_call(
+        _shard_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_clients,), lambda i, j: (j,)),
+            pl.BlockSpec((block_clients, chunk), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((chunk,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(scale, updates)

@@ -1,9 +1,18 @@
 """Training driver: federated training of any assigned architecture (reduced
 or full) with OCS, on the local device set or a forced-host-device mesh.
 
+Engine selection is mesh-aware (fl.engine.make_engine): with more than one
+device (or ``--shard on``) the client dimension shards over a 1-D ``data``
+mesh and the round runs through fl/shard_round.py's explicit collectives —
+``--agg-backend pallas`` then aggregates via the per-shard fused kernel plus
+one cross-shard psum (kernels/sharded_aggregate.py).
+
 Examples (CPU container — reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
       --rounds 20 --clients 8 --expected 2 --sampler aocs
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
+      --clients 8 --shard on --agg-backend pallas
 """
 
 from __future__ import annotations
@@ -18,7 +27,8 @@ import numpy as np
 from repro.checkpoint import save
 from repro.configs import get
 from repro.configs.base import FLConfig
-from repro.fl.round import client_weights, make_round, round_bits
+from repro.fl.engine import make_engine
+from repro.fl.round import client_weights, round_bits
 from repro.models import build_model
 
 
@@ -51,6 +61,11 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr-local", type=float, default=0.05)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--shard", default="auto", choices=["auto", "on", "off"],
+                    help="shard clients over a 1-D data mesh (auto: when >1 "
+                         "device and clients divide the device count)")
+    ap.add_argument("--engine", default="vmap", choices=["vmap", "scan"])
+    ap.add_argument("--agg-backend", default="jnp", choices=["jnp", "pallas"])
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -58,13 +73,28 @@ def main():
     fl = FLConfig(
         n_clients=args.clients, expected_clients=args.expected, sampler=args.sampler,
         local_steps=args.local_steps, lr_local=args.lr_local,
+        round_engine=args.engine, agg_backend=args.agg_backend,
     )
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+    n_dev = jax.device_count()
+    shard = args.shard == "on" or (
+        args.shard == "auto" and n_dev > 1 and fl.n_clients % n_dev == 0
+    )
+    mesh = None
+    if shard:
+        if fl.n_clients % n_dev:
+            raise SystemExit(
+                f"--shard on needs n_clients ({fl.n_clients}) divisible by the "
+                f"device count ({n_dev})"
+            )
+        mesh = jax.make_mesh((n_dev,), (fl.client_axis,))
     print(f"[train] {cfg.name}: {dim/1e6:.1f}M params, n={fl.n_clients} m={fl.expected_clients} "
-          f"sampler={fl.sampler}")
-    step = jax.jit(make_round(model.loss, fl))
+          f"sampler={fl.sampler} engine={'shard_map/' + str(n_dev) if shard else fl.round_engine} "
+          f"agg={fl.agg_backend}")
+    step = jax.jit(make_engine(model.loss, fl, mesh=mesh))
     w = client_weights(fl)
     rng = np.random.default_rng(0)
     total_bits = 0

@@ -1,0 +1,19 @@
+"""The docs contract (docs/paper_map.md + public-API docstrings) holds.
+
+Same check the CI `docs` job runs via ``python tools/check_docs.py`` —
+running it in the tier-1 suite too means a local ``pytest`` catches a rotted
+paper->code table before CI does.  Pure AST/IO, no jax import."""
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_docs_contract():
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_docs.py")],
+        capture_output=True, text=True, timeout=60,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr

@@ -49,8 +49,11 @@ print("SHARD-ROUND-OK")
 
 
 def test_shard_map_round_subprocess():
-    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
-    env.pop("JAX_PLATFORMS", None)
+    # JAX_PLATFORMS=cpu: the forced host-device mesh is CPU emulation; leaving
+    # the platform unpinned makes jax probe for a TPU first, which on hosts
+    # with a libtpu install but no TPU stalls for minutes in metadata retries.
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_PLATFORMS="cpu")
     out = subprocess.run([sys.executable, "-c", CODE], env=env,
                          capture_output=True, text=True, timeout=600)
     assert "SHARD-ROUND-OK" in out.stdout, out.stdout + out.stderr

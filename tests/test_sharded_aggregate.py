@@ -1,0 +1,195 @@
+"""Sharded masked-aggregate parity: the per-shard pallas kernel
+(kernels/sharded_aggregate.py) vs ``ops.tree_masked_aggregate`` vs the jnp
+oracle, on a 1-device mesh in-process and a forced multi-device mesh
+(subprocess), including the uneven-chunk padding edge — plus the shard_map
+round's parity against the single-device RoundEngine paths (bitwise-identical
+masks, allclose params) under the emulated mesh."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _workload(clients, d, seed=0, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    x = (jax.random.normal(key, (clients, d)) * 3).astype(dtype)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.6, (clients,))
+    scale = jnp.where(
+        mask, jax.random.uniform(jax.random.fold_in(key, 2), (clients,)) * 4, 0.0
+    )
+    return x, scale
+
+
+# uneven cases: d not a chunk multiple AND clients not a block multiple,
+# exercising both padding axes of the wrapper.
+@pytest.mark.parametrize("clients,block", [(1, 4), (5, 2), (12, 8), (16, 16)])
+@pytest.mark.parametrize("d,chunk", [(64, 16), (1000, 128), (130, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_shard_kernel_matches_oracle(clients, block, d, chunk, dtype):
+    x, scale = _workload(clients, d, seed=clients * d, dtype=dtype)
+    got = ops.shard_masked_aggregate(
+        x, scale, chunk=chunk, block_clients=block, interpret=True
+    )
+    want = ref.masked_scale_aggregate_ref(x, scale)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_shard_kernel_matches_single_device_kernel():
+    """Per-shard kernel == the master-side fused kernel == the oracle."""
+    x, scale = _workload(9, 200, seed=3)
+    a = ops.shard_masked_aggregate(x, scale, chunk=64, block_clients=4, interpret=True)
+    b = ops.masked_scale_aggregate(x, scale, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_tree_shard_aggregate_matches_tree_masked_aggregate():
+    """Pytree front-end parity on uneven leaf sizes (D = 3*5 + 17 = 32 -> pads)."""
+    key = jax.random.PRNGKey(5)
+    upd = {
+        "a": jax.random.normal(key, (6, 3, 5)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (6, 17)),
+    }
+    _, scale = _workload(6, 1, seed=7)
+    got = ops.tree_shard_masked_aggregate(
+        upd, scale, chunk=16, block_clients=4, interpret=True
+    )
+    want = ops.tree_masked_aggregate(upd, scale, chunk=16, interpret=True)
+    for a, b in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_shard_round_rejects_compression():
+    """A compressing config must be rejected on the shard path, not silently
+    aggregated uncompressed (which would mis-bill round_bits)."""
+    from repro.configs.base import FLConfig
+    from repro.fl.engine import make_engine
+    from repro.models.simple import mlp_classifier
+
+    mesh = jax.make_mesh((1,), ("data",))
+    _, loss, _ = mlp_classifier(4, 2, hidden=4)
+    fl = FLConfig(n_clients=4, expected_clients=2, compression="randk",
+                  compression_param=0.5)
+    with pytest.raises(ValueError, match="compression"):
+        make_engine(loss, fl, mesh=mesh)
+
+
+def test_mesh_level_wrapper_one_device():
+    """ops.sharded_masked_aggregate under a trivial 1-device mesh: the
+    shard_map plumbing alone must not perturb the aggregate."""
+    mesh = jax.make_mesh((1,), ("data",))
+    x, scale = _workload(7, 250, seed=11)
+    got = ops.sharded_masked_aggregate(
+        x, scale, mesh, chunk=64, block_clients=4, interpret=True
+    )
+    want = ref.masked_scale_aggregate_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+MESH_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.kernels import ops, ref
+
+mesh = jax.make_mesh((4,), ("data",))
+key = jax.random.PRNGKey(0)
+# d=1000 is NOT a multiple of chunk=128 and the local client count 3 is NOT a
+# multiple of block_clients=2: both pads are exercised inside every shard.
+n, d = 12, 1000
+x = jax.random.normal(key, (n, d)) * 3
+scale = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, 1), 0.6, (n,)),
+                  jax.random.uniform(jax.random.fold_in(key, 2), (n,)) * 4, 0.0)
+want = ref.masked_scale_aggregate_ref(x, scale)
+got = ops.sharded_masked_aggregate(x, scale, mesh, chunk=128, block_clients=2,
+                                   interpret=True)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+# tree front-end vs the replicated-flatten single-device wrapper
+upd = {"a": x[:, :600].reshape(n, 30, 20), "b": x[:, 600:]}
+flat_single = ops.tree_masked_aggregate(upd, scale, interpret=True)
+import functools
+from jax.sharding import PartitionSpec as P
+smap, check = ops.get_shard_map()
+tree_fn = smap(
+    functools.partial(ops.tree_shard_masked_aggregate, axis_name="data",
+                      chunk=128, block_clients=2, interpret=True),
+    mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P(), **check,
+)
+got_tree = tree_fn(upd, scale)
+for a, b in zip(jax.tree_util.tree_leaves(got_tree),
+                jax.tree_util.tree_leaves(flat_single)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+print("SHARDED-AGG-OK")
+"""
+
+
+ROUND_PARITY_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import FLConfig
+from repro.fl.engine import RoundEngine, make_engine
+from repro.fl.round import client_weights
+from repro.models.simple import mlp_classifier
+
+mesh = jax.make_mesh((4,), ("data",))
+init, loss, _ = mlp_classifier(12, 3, hidden=8)
+params = init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(1)
+batch = {"x": jnp.asarray(rng.normal(size=(8, 2, 4, 12)).astype("float32")),
+         "y": jnp.asarray(rng.integers(0, 3, (8, 2, 4)).astype("int32"))}
+key = jax.random.PRNGKey(7)
+
+for be, avail in (("jnp", 1.0), ("pallas", 1.0), ("pallas", 0.7)):
+    fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
+                  lr_local=0.1, agg_backend=be, availability=avail)
+    w = client_weights(fl)
+    shard_step = jax.jit(make_engine(loss, fl, mesh=mesh))
+    ps, _, ms = shard_step(params, (), batch, w, key)
+    assert int(jnp.sum(ms.mask)) > 0
+    for mem in ("vmap", "scan"):
+        eng = RoundEngine(loss, fl, memory=mem, backend=be, scan_group=4)
+        p1, _, m1 = jax.jit(eng.make_step())(params, (), batch, w, key)
+        # bitwise-identical sampling decisions across the mesh boundary
+        assert np.array_equal(np.asarray(m1.mask), np.asarray(ms.mask)), (be, mem)
+        np.testing.assert_allclose(np.asarray(m1.norms), np.asarray(ms.norms),
+                                   atol=1e-6, err_msg=f"{be}/{mem}")
+        np.testing.assert_allclose(np.asarray(m1.probs), np.asarray(ms.probs),
+                                   atol=1e-6, err_msg=f"{be}/{mem}")
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(ps)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                       err_msg=f"{be}/{mem}")
+print("SHARD-PARITY-OK")
+"""
+
+
+def _run_subprocess(code, marker):
+    # JAX_PLATFORMS=cpu: the forced host-device mesh is CPU emulation; leaving
+    # the platform unpinned makes jax probe for a TPU first, which on hosts
+    # with a libtpu install but no TPU stalls for minutes in metadata retries.
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert marker in out.stdout, out.stdout + out.stderr
+
+
+def test_sharded_aggregate_multi_device_subprocess():
+    _run_subprocess(MESH_CODE, "SHARDED-AGG-OK")
+
+
+def test_shard_round_engine_parity_subprocess():
+    """Acceptance gate: the shard_map round (per-shard pallas kernel + one
+    psum) matches every single-device RoundEngine path on the emulated
+    4-device mesh — bitwise-identical masks, allclose params."""
+    _run_subprocess(ROUND_PARITY_CODE, "SHARD-PARITY-OK")
