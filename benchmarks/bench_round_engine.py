@@ -5,20 +5,32 @@ FEMNIST-shaped workload, plus a compression variant and the shard_map round
 backends) — the numbers that decide which engine the trainer should default
 to on a given platform.
 
+Since schema 3 the scan combos run twice — with the bounded update cache
+sized to hold every group (`scan+<be>`, the single-pass engine: n
+``local_update`` evaluations per round) and with the cache disabled
+(`scan+<be>+recompute`, the original two-pass engine: 2n evaluations) — and
+every combo records its analytic ``local_update_evals``, so the artifact
+itself shows the cache's recompute saving (asserted here: cached < recompute).
+
 On this CPU container the pallas backend runs in interpret mode, so its
 wall-clock is a correctness proxy only (the artifact records the mode); on a
 TPU the same harness times the compiled kernels.
 
-Artifact: benchmarks/artifacts/round_engine.json (schema 2 — see
-docs/architecture.md for the field contract; schema 1 lacked the ``schema``
-field and the ``shard+*`` combos).
+Artifact: benchmarks/artifacts/round_engine.json (schema 3 — see
+docs/benchmarks.md for the field contract and docs/architecture.md for how
+the numbers gate the FLConfig defaults; schema 2 lacked the cache combos and
+``local_update_evals``, schema 1 also lacked the ``schema`` field and the
+``shard+*`` combos).
+
+``python -m benchmarks.bench_round_engine --smoke`` runs tiny shapes and
+asserts the schema-3 contract (the CI bench-smoke step).
 """
 
 from __future__ import annotations
 
-import itertools
 import json
 import os
+import sys
 import time
 
 import jax
@@ -30,11 +42,34 @@ from repro.configs.base import FLConfig
 from repro.data import femnist_like
 from repro.fl.engine import RoundEngine
 from repro.fl.round import client_weights
+from repro.kernels import update_cache
 from repro.models.simple import mlp_classifier
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
-COMBOS = list(itertools.product(["vmap", "scan"], ["jnp", "pallas"]))
+SCHEMA = 3
+
+# keys every combo entry must carry (checked by smoke() / the CI bench step)
+COMBO_KEYS = {
+    "us_per_round", "memory", "backend", "compression", "sent_clients",
+    "local_update_evals",
+}
+
+
+def _combos(n, scan_group):
+    """(memory, backend, cache_groups, tag): the single-device matrix.
+
+    Scan runs once fully cached (single-pass: the tag every consumer reads
+    first) and once with the cache off (`+recompute`, the two-pass baseline
+    the cache is judged against).
+    """
+    full = n // scan_group
+    out = []
+    for be in ("jnp", "pallas"):
+        out.append(("vmap", be, 0, f"vmap+{be}"))
+        out.append(("scan", be, full, f"scan+{be}"))
+        out.append(("scan", be, 0, f"scan+{be}+recompute"))
+    return out
 
 
 def _time_step(step, params, batch, weights, key, reps):
@@ -48,7 +83,8 @@ def _time_step(step, params, batch, weights, key, reps):
     return (time.time() - t0) / reps * 1e6, metrics_out
 
 
-def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0):
+def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
+        artifact="round_engine.json"):
     os.makedirs(ART, exist_ok=True)
     ds = femnist_like(dataset_id=1, n_clients=max(2 * n, 64), seed=seed)
     init, loss, _ = mlp_classifier(ds.input_dim, ds.num_classes, hidden=64)
@@ -62,10 +98,11 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0):
 
     n_dev = jax.device_count()
     results = {
-        "schema": 2,
+        "schema": SCHEMA,
         "workload": {
             "n_clients": n, "expected_clients": m, "local_steps": local_steps,
             "batch_size": batch_size, "model_dim": dim, "reps": reps,
+            "scan_group": scan_group,
             "backend_platform": jax.default_backend(),
             "pallas_interpret": jax.default_backend() != "tpu",
             "mesh_devices": n_dev,
@@ -80,26 +117,45 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0):
         )
         weights = client_weights(fl)
         masks = {}
-        for mem, be in COMBOS:
-            engine = RoundEngine(loss, fl, memory=mem, backend=be, scan_group=8)
+        for mem, be, cg, base_tag in _combos(n, scan_group):
+            engine = RoundEngine(loss, fl, memory=mem, backend=be,
+                                 scan_group=scan_group, cache_groups=cg)
             step = jax.jit(engine.make_step())
             us, (_, _, metrics) = _time_step(step, params, batch, weights, key, reps)
-            masks[(mem, be)] = np.asarray(metrics.mask)
-            tag = f"{mem}+{be}" + ("" if compression == "none" else f"+{compression}")
+            masks[base_tag] = np.asarray(metrics.mask)
+            tag = base_tag + ("" if compression == "none" else f"+{compression}")
             csv_line(
                 f"round_engine_{tag}", us,
-                f"sent={int(metrics.mask.sum())};loss={float(metrics.loss):.4f}",
+                f"sent={int(metrics.mask.sum())};loss={float(metrics.loss):.4f}"
+                f";evals={engine.local_update_evals}",
             )
-            results["combos"][tag] = {
+            entry = {
                 "us_per_round": us,
                 "memory": mem,
                 "backend": be,
                 "compression": compression,
                 "sent_clients": int(metrics.mask.sum()),
+                "local_update_evals": engine.local_update_evals,
             }
+            if mem == "scan":
+                entry["cache_groups"] = cg
+                entry["cache_bytes"] = update_cache.cache_bytes(
+                    cg, scan_group, dim, n_groups=n // scan_group
+                )
+            results["combos"][tag] = entry
         # the matrix is only comparable if every combo made the same decisions
-        ref = masks[("vmap", "jnp")]
+        ref = masks["vmap+jnp"]
         assert all(np.array_equal(ref, v) for v in masks.values()), "mask divergence"
+        # the acceptance gate of the single-pass engine: the cached path does
+        # strictly fewer local_update evaluations than two-pass recompute
+        # (n vs 2n when the cache covers every group).
+        for be in ("jnp", "pallas"):
+            sfx = "" if compression == "none" else f"+{compression}"
+            cached = results["combos"][f"scan+{be}{sfx}"]["local_update_evals"]
+            twopass = results["combos"][f"scan+{be}+recompute{sfx}"]["local_update_evals"]
+            assert cached == n and twopass == 2 * n and cached < twopass, (
+                cached, twopass,
+            )
 
     # shard_map round (explicit collectives) over every local device; the
     # shard path has no compression axis, so it joins the 'none' matrix only.
@@ -131,12 +187,42 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0):
                 "compression": "none",
                 "mesh_axis_size": n_dev,
                 "sent_clients": int(metrics.mask.sum()),
+                "local_update_evals": n,
             }
 
-    with open(os.path.join(ART, "round_engine.json"), "w") as f:
+    with open(os.path.join(ART, artifact), "w") as f:
         json.dump(results, f, indent=2)
     return results
 
 
+def smoke():
+    """CI gate: tiny-shape run + schema-3 contract assertions.
+
+    Keeps the benchmark from silently rotting — the artifact must carry the
+    schema marker, the per-combo key set, the cache metadata on scan combos,
+    and the cached < recompute local_update_evals relation.  Writes to its
+    own (git-ignored) artifact so a local smoke run never clobbers the
+    committed round_engine.json CPU baseline.
+    """
+    res = run(n=8, m=3, local_steps=2, batch_size=4, reps=1, scan_group=4,
+              artifact="round_engine_smoke.json")
+    assert res["schema"] == SCHEMA, res["schema"]
+    assert {"n_clients", "scan_group", "pallas_interpret",
+            "mesh_devices"} <= set(res["workload"])
+    tags = ["vmap+jnp", "vmap+pallas", "scan+jnp", "scan+pallas",
+            "scan+jnp+recompute", "scan+pallas+recompute", "scan+jnp+randk"]
+    if 8 % max(jax.device_count(), 1) == 0:
+        # run() skips the shard section when n doesn't divide the devices
+        tags += ["shard+jnp", "shard+pallas"]
+    for tag in tags:
+        assert tag in res["combos"], tag
+        assert COMBO_KEYS <= set(res["combos"][tag]), tag
+    for be in ("jnp", "pallas"):
+        assert {"cache_groups", "cache_bytes"} <= set(res["combos"][f"scan+{be}"])
+        assert (res["combos"][f"scan+{be}"]["local_update_evals"]
+                < res["combos"][f"scan+{be}+recompute"]["local_update_evals"])
+    print("round_engine bench smoke OK (schema 3)")
+
+
 if __name__ == "__main__":
-    run()
+    smoke() if "--smoke" in sys.argv[1:] else run()

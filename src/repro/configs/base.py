@@ -215,11 +215,27 @@ class FLConfig:
     # paper Appendix E: per-client availability probability q (1.0 = always)
     availability: float = 1.0
     # round-engine execution policy (fl/engine.py) — orthogonal axes:
-    round_engine: str = "vmap"     # memory policy: vmap | scan (two-pass OCS)
+    round_engine: str = "vmap"     # memory policy: vmap | scan (single-pass OCS)
     agg_backend: str = "jnp"       # masked-aggregate backend: jnp | pallas
     scan_group: int = 2            # clients per scan group (round_engine='scan')
+    # bounded HBM update cache of the scan engine (kernels/update_cache.py):
+    # pass 1 parks the first cache_groups groups' update matrices
+    # (cache_groups * scan_group * d elements); post-plan those aggregate
+    # without recomputing local_update, groups beyond capacity spill to
+    # recompute.  0 = no cache (the original two-pass scan, 2n evals/round);
+    # >= n_clients/scan_group = every update computed exactly once.
+    cache_groups: int = 8
     # mesh execution (fl/shard_round.py, selected by fl.engine.make_engine
     # when a mesh is active): the mesh axis the client dimension shards over.
     # agg_backend applies on this path too — 'pallas' runs the per-shard
     # fused kernel (kernels/sharded_aggregate.py) + one cross-shard psum.
     client_axis: str = "data"
+
+    def __post_init__(self):
+        if self.cache_groups < 0:
+            raise ValueError(
+                f"cache_groups must be >= 0 (0 disables the update cache), "
+                f"got {self.cache_groups}"
+            )
+        if self.scan_group < 1:
+            raise ValueError(f"scan_group must be >= 1, got {self.scan_group}")

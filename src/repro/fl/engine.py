@@ -6,18 +6,27 @@ under two orthogonal execution axes.
   - ``'vmap'`` (paper-faithful baseline): all n client updates are
     materialised simultaneously (leading client axis sharded over the data
     mesh axes) before sampling — O(n * d / shards) live memory.
-  - ``'scan'`` (beyond-paper, two-pass OCS): clients are processed in groups
-    of ``scan_group`` by a sequential scan; pass 1 computes only the update
-    NORMS (updates die after their norm is taken), the sampling plan is
-    computed, and pass 2 recomputes each group's updates and accumulates the
-    scaled aggregate.  Live memory drops from O(n*d) to O(scan_group*d) at
-    the price of computing local updates twice.
+  - ``'scan'`` (beyond-paper, single-pass OCS): clients are processed in
+    groups of ``scan_group`` by a sequential scan; pass 1 computes each
+    group's (optionally compressed) updates ONCE, emits their norms, and
+    parks the first ``cache_groups`` groups' update matrices in a bounded
+    HBM cache (kernels/update_cache.py).  After the sampling plan is fixed,
+    cached groups aggregate straight from the cache — only groups beyond
+    capacity spill to recomputing ``local_update``.  Live memory is
+    O(cache_groups * scan_group * d) against vmap's O(n * d);
+    ``cache_groups = 0`` degenerates to the original two-pass engine
+    (O(scan_group * d) live, every update computed twice), and a full cache
+    (``cache_groups >= n / scan_group``) touches every update exactly once
+    (``RoundEngine.local_update_evals`` is the analytic count).
 
 * **aggregation backend** — how Eq. 2's masked aggregate
   ``G = sum_i mask_i * (w_i/p_i) * U_i`` is contracted: ``'jnp'`` (portable
-  tree-map) or ``'pallas'`` (the fused streaming kernel in
-  kernels/masked_aggregate.py — single HBM pass, no scaled per-client
-  intermediate).
+  tree-map / oracle contraction) or ``'pallas'`` (fused streaming kernels —
+  kernels/masked_aggregate.py on the vmap path; on the scan path the fused
+  norm+aggregate kernel kernels/norm_aggregate.py, which emits each group's
+  squared norms AND its aggregate partial from ONE HBM tile stream).  Both
+  backends share the cache semantics via
+  ``kernels.update_cache.group_norm_aggregate``.
 
 A third, orthogonal choice is the **mesh**: when one is active,
 :func:`make_engine` selects the shard_map round (fl/shard_round.py) — the
@@ -51,6 +60,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import ocs
+from repro.kernels import update_cache
 
 MEMORY_POLICIES = ("vmap", "scan")
 
@@ -151,9 +161,9 @@ class RoundEngine:
     Bernoulli participation, and the unbiased masked aggregate (Eq. 2).
 
     Defaults come from the config (``fl.round_engine`` / ``fl.agg_backend`` /
-    ``fl.scan_group``); keyword arguments override per-instance so benchmarks
-    can sweep the matrix without minting configs.  For mesh-aware selection
-    use :func:`make_engine`.
+    ``fl.scan_group`` / ``fl.cache_groups``); keyword arguments override
+    per-instance so benchmarks can sweep the matrix without minting configs.
+    For mesh-aware selection use :func:`make_engine`.
     """
 
     def __init__(
@@ -165,6 +175,7 @@ class RoundEngine:
         memory: str | None = None,
         backend: str | None = None,
         scan_group: int | None = None,
+        cache_groups: int | None = None,
         interpret: bool | None = None,
     ):
         self.fl = fl
@@ -172,6 +183,9 @@ class RoundEngine:
         self.memory = memory if memory is not None else fl.round_engine
         self.backend = backend if backend is not None else fl.agg_backend
         self.scan_group = scan_group if scan_group is not None else fl.scan_group
+        self.cache_groups = (
+            cache_groups if cache_groups is not None else fl.cache_groups
+        )
         self.interpret = interpret
         if self.memory not in MEMORY_POLICIES:
             raise ValueError(
@@ -186,7 +200,25 @@ class RoundEngine:
             raise ValueError(
                 f"n_clients={fl.n_clients} not divisible by scan_group={self.scan_group}"
             )
+        if self.cache_groups < 0:
+            raise ValueError(f"cache_groups must be >= 0, got {self.cache_groups}")
         self._local_update = make_local_update(loss_fn, fl)
+
+    @property
+    def local_update_evals(self) -> int:
+        """Analytic ``local_update`` evaluations per round for this engine.
+
+        vmap: n (every update computed once, all live).  scan: n plus one
+        recompute per client beyond the bounded cache's capacity — 2n when
+        ``cache_groups=0`` (the old two-pass engine), exactly n once
+        ``cache_groups >= n_clients / scan_group``.  Recorded per combo in
+        the round-engine benchmark artifact (schema 3).
+        """
+        if self.memory == "vmap":
+            return self.fl.n_clients
+        return update_cache.local_update_evals(
+            self.fl.n_clients, self.scan_group, self.cache_groups
+        )
 
     # -- shared pieces ------------------------------------------------------
 
@@ -258,22 +290,32 @@ class RoundEngine:
         return round_step
 
     def _make_scan_step(self):
+        from repro.kernels import ops as kops
+
         fl = self.fl
         n, g = fl.n_clients, self.scan_group
         n_groups = n // g
+        # bounded HBM update cache (kernels/update_cache.py): the first
+        # n_cached groups' update matrices survive pass 1; the n_spill groups
+        # beyond capacity are the only recompute left post-plan.
+        n_cached = update_cache.num_slots(self.cache_groups, n_groups)
+        n_spill = n_groups - n_cached
 
         def group_batches(batch):
             return jax.tree_util.tree_map(
                 lambda x: x.reshape((n_groups, g) + x.shape[1:]), batch
             )
 
+        def take(tree, lo, hi):
+            return jax.tree_util.tree_map(lambda x: x[lo:hi], tree)
+
         def round_step(params, opt_state, batch, weights, key):
             k_sample, k_comp = jax.random.split(key)
             gbatch = group_batches(batch)
             w_groups = weights.reshape(n_groups, g)
-            # same per-client compression keys as the vmap path, re-derived in
-            # both passes, so compressed updates (hence norms, hence masks)
-            # match across all four engine combinations.
+            # same per-client compression keys as the vmap path, re-derived on
+            # the spill recompute, so compressed updates (hence norms, hence
+            # masks) match across all four engine combinations.
             comp_keys = jax.random.split(k_comp, n)
             comp_keys = comp_keys.reshape((n_groups, g) + comp_keys.shape[1:])
 
@@ -283,63 +325,85 @@ class RoundEngine:
                 )
                 return self._compress_group(upd, kg), losses
 
-            # pass 1: norms only — each group's updates are dead after this
-            # step, so live memory is O(g * |params|) instead of O(n * |params|).
+            # pass 1: every group's updates are computed ONCE.  Cached groups
+            # additionally emit their client-major (g, D) matrix — the scan's
+            # stacked ys ARE the bounded (n_cached, g, D) HBM cache; spill
+            # groups emit norms only (their updates die here and are
+            # recomputed post-plan).  Norms use the same ocs.client_norms on
+            # the update tree as the vmap path, keeping them — and therefore
+            # the sampling masks — bitwise identical across engines.
+            def fill_pass(_, inp):
+                gb, wg, kg = inp
+                upd, losses = group_updates(gb, kg)
+                flat = kops.tree_to_client_matrix(upd)
+                return None, (ocs.client_norms(upd, wg), losses, flat)
+
             def norm_pass(_, inp):
                 gb, wg, kg = inp
                 upd, losses = group_updates(gb, kg)
                 return None, (ocs.client_norms(upd, wg), losses)
 
-            _, (norms_g, losses_g) = jax.lax.scan(
-                norm_pass, None, (gbatch, w_groups, comp_keys)
-            )
-            u = norms_g.reshape(n)
-            losses = losses_g.reshape(n)
+            norm_parts, loss_parts, cache = [], [], None
+            if n_cached:
+                _, (norms_c, losses_c, cache) = jax.lax.scan(
+                    fill_pass, None,
+                    (take(gbatch, 0, n_cached), w_groups[:n_cached],
+                     comp_keys[:n_cached]),
+                )
+                norm_parts.append(norms_c)
+                loss_parts.append(losses_c)
+            if n_spill:
+                _, (norms_s, losses_s) = jax.lax.scan(
+                    norm_pass, None,
+                    (take(gbatch, n_cached, n_groups), w_groups[n_cached:],
+                     comp_keys[n_cached:]),
+                )
+                norm_parts.append(norms_s)
+                loss_parts.append(losses_s)
+            u = jnp.concatenate(norm_parts, axis=0).reshape(n)
+            losses = jnp.concatenate(loss_parts, axis=0).reshape(n)
             plan = self._plan(u, weights, k_sample)
             scale_g = plan.scale.reshape(n_groups, g)
 
-            # pass 2: recompute updates, accumulate the scaled aggregate.
-            if self.backend == "pallas":
-                from repro.kernels import ops as kops
+            # post-plan aggregate into one flat f32 (D,) accumulator, group by
+            # group through update_cache.group_norm_aggregate (backend
+            # 'pallas' = the fused norm+aggregate kernel streaming each (g, D)
+            # matrix once; 'jnp' = its oracle contraction).  The squared
+            # norms the fused stream re-emits are free cache-integrity data
+            # (equal to pass 1's — gated by tests/test_norm_aggregate.py) and
+            # are discarded here.
+            dim = sum(x.size for x in jax.tree_util.tree_leaves(params))
+            agg_flat = jnp.zeros((dim,), jnp.float32)
 
-                # accumulate the flat (D,) aggregate: each group contracts
-                # through the fused kernel, streaming (g, chunk) tiles.
-                dim = sum(x.size for x in jax.tree_util.tree_leaves(params))
+            def cached_agg(acc, inp):
+                flat, sc = inp
+                _, part = update_cache.group_norm_aggregate(
+                    flat, sc, self.backend, self.interpret
+                )
+                return acc + part, None
 
-                def agg_pass(acc, inp):
-                    gb, sc, kg = inp
-                    upd, _ = group_updates(gb, kg)
-                    flat = kops.tree_to_client_matrix(upd)
-                    return acc + kops.masked_scale_aggregate(
-                        flat, sc, interpret=self.interpret
-                    ), None
+            def spill_agg(acc, inp):
+                gb, sc, kg = inp
+                upd, _ = group_updates(gb, kg)
+                flat = kops.tree_to_client_matrix(upd)
+                _, part = update_cache.group_norm_aggregate(
+                    flat, sc, self.backend, self.interpret
+                )
+                return acc + part, None
 
+            if n_cached:
                 agg_flat, _ = jax.lax.scan(
-                    agg_pass, jnp.zeros((dim,), jnp.float32),
-                    (gbatch, scale_g, comp_keys),
+                    cached_agg, agg_flat, (cache, scale_g[:n_cached])
                 )
-                aggregate = kops.client_matrix_to_tree(
-                    agg_flat, params, strip_client_axis=False
+            if n_spill:
+                agg_flat, _ = jax.lax.scan(
+                    spill_agg, agg_flat,
+                    (take(gbatch, n_cached, n_groups), scale_g[n_cached:],
+                     comp_keys[n_cached:]),
                 )
-            else:
-                zero = jax.tree_util.tree_map(
-                    lambda x: jnp.zeros(x.shape, jnp.float32), params
-                )
-
-                def agg_pass(acc, inp):
-                    gb, sc, kg = inp
-                    upd, _ = group_updates(gb, kg)
-                    acc = jax.tree_util.tree_map(
-                        lambda a, ug: a
-                        + jnp.tensordot(sc, ug.astype(jnp.float32), axes=(0, 0)),
-                        acc,
-                        upd,
-                    )
-                    return acc, None
-
-                aggregate, _ = jax.lax.scan(
-                    agg_pass, zero, (gbatch, scale_g, comp_keys)
-                )
+            aggregate = kops.client_matrix_to_tree(
+                agg_flat, params, strip_client_axis=False
+            )
 
             new_params, new_opt = self._apply_server(params, opt_state, aggregate)
             return new_params, new_opt, self._metrics(plan, losses)

@@ -68,8 +68,14 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
         client_axis = fl.client_axis
     if fl.compression != "none":
         raise ValueError(
-            "compression is not supported on the shard_map path yet; use the "
-            "single-device RoundEngine (fl.round_engine) for compressed rounds"
+            f"fl.compression={fl.compression!r} is not supported on the "
+            "shard_map path yet (clients would have to compress before "
+            "reporting norms).  Either run the round without a mesh — "
+            "fl.engine.make_engine(..., mesh=None) selects the single-device "
+            "RoundEngine, where every fl.round_engine x fl.agg_backend combo "
+            "supports compression — or unset fl.compression "
+            "(compression='none') to keep the mesh.  See "
+            "docs/architecture.md#limits."
         )
     local_update = make_local_update(loss_fn, fl)
     axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]

@@ -5,6 +5,12 @@ in ref.py and a jitted wrapper in ops.py (interpret=True on CPU):
 * client_norm        — fused per-client update-norm reduction (OCS Alg. 1 line 3)
 * masked_aggregate   — fused masked scale-&-aggregate (OCS estimator, Eq. 2):
                        sum_i mask_i * (w_i/p_i) * U_i in one HBM pass
+* norm_aggregate     — both OCS reductions (squared norms AND the Eq. 2
+                       aggregate) from one HBM tile stream, for the
+                       single-pass scan engine's post-plan pass
+* update_cache       — bounded HBM cache of per-group update matrices
+                       (FLConfig.cache_groups) bounding the scan engine's
+                       post-plan recompute
 * ssd_scan           — chunked Mamba2 SSD with VMEM recurrent-state carry
 """
 

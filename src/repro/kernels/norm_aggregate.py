@@ -1,0 +1,80 @@
+"""Fused norm-&-aggregate — both OCS reductions from ONE HBM tile stream.
+
+The OCS critical path touches the client-major update matrix twice: once to
+emit the per-client squared norms (paper Alg. 1 line 3: ``u_i = ||w_i U_i||``,
+the input to Eq. 7's probabilities) and once to contract Eq. 2's masked
+aggregate ``G = sum_i scale_i * U_i``.  Run separately
+(client_norm.client_sqnorms_pallas + masked_aggregate.masked_scale_aggregate_pallas)
+that is two full passes over HBM.  This kernel emits BOTH outputs from a
+single ``(clients, chunk)`` tile stream: each grid step reads one tile,
+row-reduces the squares into the resident ``(clients,)`` squared-norm
+accumulator AND contracts the ``(clients,) @ (clients, chunk)`` matvec into
+its ``(chunk,)`` slice of the aggregate — one HBM read per update element,
+total, for the whole post-plan reduction work of a round.
+
+The single-pass scan engine (fl/engine.py) is the consumer: post-plan, each
+cached (or spill-recomputed) group matrix streams through here once, yielding
+the group's aggregate partial plus its squared norms for free from the same
+tiles — the norms re-emitted on the aggregate pass are a zero-cost cache
+integrity signal (they must equal pass 1's, which
+tests/test_norm_aggregate.py gates).
+
+Grid: (num_chunks,).  Blocks: the ``(C,)`` scale vector and the ``(C,)``
+squared-norm accumulator map to the same block every step (both stay resident
+in VMEM); updates stream as ``(C, CHUNK)`` tiles; the aggregate output block
+``(CHUNK,)`` at chunk ``i`` is touched by exactly one grid step, so only the
+norm output needs cross-step accumulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _norm_agg_kernel(s_ref, x_ref, sq_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    sq_ref[...] += jnp.sum(x * x, axis=-1)
+    o_ref[...] = jax.lax.dot_general(
+        s_ref[...].astype(jnp.float32), x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def norm_scale_aggregate_pallas(
+    updates: jax.Array, scale: jax.Array, chunk: int = 4096, interpret: bool = False
+):
+    """updates: (clients, D), scale: (clients,) ->
+    ((clients,) f32 squared norms, (D,) f32 aggregate), one HBM pass.
+
+    D is padded to a multiple of ``chunk`` by the wrapper in ops.py (zero
+    padding changes neither output).
+    """
+    c, d = updates.shape
+    assert scale.shape == (c,), (scale.shape, c)
+    assert d % chunk == 0, (d, chunk)
+    grid = (d // chunk,)
+    return pl.pallas_call(
+        _norm_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c, chunk), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scale, updates)

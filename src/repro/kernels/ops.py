@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.client_norm import client_sqnorms_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.masked_aggregate import masked_scale_aggregate_pallas
+from repro.kernels.norm_aggregate import norm_scale_aggregate_pallas
 from repro.kernels.sharded_aggregate import sharded_masked_aggregate_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -122,6 +123,31 @@ def masked_scale_aggregate(updates: jax.Array, scale: jax.Array, chunk: int = 40
         updates = jnp.pad(updates, ((0, 0), (0, pad)))
     out = masked_scale_aggregate_pallas(updates, scale, chunk=chunk, interpret=interpret)
     return out[:d]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def norm_scale_aggregate(updates: jax.Array, scale: jax.Array, chunk: int = 4096,
+                         interpret: bool | None = None):
+    """(clients, D), (clients,) -> ((clients,) sq norms, (D,) aggregate), fused.
+
+    Both OCS reductions from one HBM tile stream
+    (kernels/norm_aggregate.py): the per-client squared norms behind
+    ``u_i = ||w_i U_i||`` (Alg. 1 line 3) AND Eq. 2's contraction
+    ``sum_i scale_i * U_i``.  The single-pass scan engine calls this on each
+    cached / spill-recomputed group matrix post-plan: the aggregate is the
+    payload, the squared norms come for free from the same tiles (a cache
+    integrity signal against pass 1's norms).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    c, d = updates.shape
+    chunk = min(chunk, max(d, 1))
+    pad = (-d) % chunk
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    sq, agg = norm_scale_aggregate_pallas(updates, scale, chunk=chunk,
+                                          interpret=interpret)
+    return sq, agg[:d]
 
 
 def tree_masked_aggregate(updates_tree, scale, chunk: int = 4096, interpret=None):

@@ -17,6 +17,11 @@ def masked_scale_aggregate_ref(updates, scale):
     return jnp.sum(x * scale.astype(jnp.float32)[:, None], axis=0)
 
 
+def norm_scale_aggregate_ref(updates, scale):
+    """(clients, D), (clients,) -> ((clients,) sq norms, (D,) aggregate)."""
+    return client_sqnorms_ref(updates), masked_scale_aggregate_ref(updates, scale)
+
+
 def flash_attention_ref(q, k, v, *, window=None, prefix=0):
     """(BH, S, d) causal attention with optional sliding window / prefix."""
     bh, s, d = q.shape

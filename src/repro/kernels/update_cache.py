@@ -1,0 +1,93 @@
+"""Bounded HBM cache of per-group client-update matrices for the single-pass
+scan engine (fl/engine.py).
+
+The paper's master needs only the norm vector to fix the participation plan
+(Eq. 7 / Alg. 2), so a memory-frugal engine can stream clients in groups and
+let each group's updates die after their norm is taken — but then it must
+recompute every update once the plan is known (the old two-pass scan: 2n
+``local_update`` evaluations per round).  This module bounds that recompute:
+pass 1 parks the first ``cache_groups`` groups' update matrices — in the
+canonical client-major ``(scan_group, D)`` layout of
+``ops.tree_to_client_matrix`` — in one HBM buffer of shape
+``(cache_groups, scan_group, D)``; post-plan, cached groups are aggregated
+straight from that buffer and only the groups beyond capacity spill to
+recompute.
+
+Memory / compute trade (``FLConfig.cache_groups`` is the knob):
+
+* live update memory: O(scan_group * d) (two-pass) ->
+  O(cache_groups * scan_group * d) (cache resident across the plan point);
+* ``local_update`` evaluations per round: 2n (two-pass) ->
+  n + max(0, n - cache_groups * scan_group) — exactly n once the cache covers
+  every group (``cache_groups >= n_clients / scan_group``);
+* ``cache_groups = 0`` disables the cache and reproduces the two-pass
+  recompute engine bit for bit.
+
+Both aggregation backends get the SAME cache semantics through
+:func:`group_norm_aggregate` — 'pallas' streams the cached matrix through the
+fused norm+aggregate kernel (kernels/norm_aggregate.py, one HBM pass for both
+reductions), 'jnp' is its oracle contraction — so cache-hit vs spill parity
+is backend-independent (gated by tests/test_norm_aggregate.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_slots(cache_groups: int, n_groups: int) -> int:
+    """Cache slots actually allocated: ``min(cache_groups, n_groups)``.
+
+    ``cache_groups`` beyond the group count would be dead memory, so capacity
+    clamps to the workload; 0 means every group spills to recompute.
+    """
+    return max(0, min(cache_groups, n_groups))
+
+
+def local_update_evals(n_clients: int, scan_group: int, cache_groups: int) -> int:
+    """Per-round ``local_update`` evaluations of the scan engine, analytic.
+
+    Pass 1 evaluates every client once (norms must cover all n); post-plan,
+    only the ``n_groups - num_slots`` groups beyond cache capacity are
+    re-evaluated.  Full cache => n; ``cache_groups = 0`` => 2n (the old
+    two-pass engine).  The vmap engine is always n.  Recorded per combo in
+    the round-engine benchmark artifact (schema 3).
+    """
+    n_groups = n_clients // scan_group
+    spill_groups = n_groups - num_slots(cache_groups, n_groups)
+    return n_clients + spill_groups * scan_group
+
+
+def cache_bytes(cache_groups: int, scan_group: int, dim: int,
+                itemsize: int = 4, n_groups: int | None = None) -> int:
+    """HBM bytes the bounded cache holds: ``cache_groups * scan_group * d``
+    update elements (``itemsize`` bytes each, 4 for the f32 default).
+
+    Pass ``n_groups`` to clamp to the slots actually allocated
+    (:func:`num_slots`) — without it the configured capacity is reported,
+    which overstates a cache larger than the workload's group count.
+    """
+    if n_groups is not None:
+        cache_groups = num_slots(cache_groups, n_groups)
+    return cache_groups * scan_group * dim * itemsize
+
+
+def group_norm_aggregate(flat: jax.Array, scale: jax.Array, backend: str,
+                         interpret: bool | None = None):
+    """One group's ``(g, D)`` matrix + ``(g,)`` scale ->
+    ``((g,) f32 squared norms, (D,) f32 aggregate partial)``.
+
+    THE post-plan Eq. 2 contraction of the single-pass scan engine, identical
+    for cache hits (``flat`` read from the cache buffer) and spills (``flat``
+    recomputed) so the two paths cannot diverge.  backend='pallas' fuses both
+    reductions into one HBM tile stream (ops.norm_scale_aggregate);
+    backend='jnp' is the portable oracle of the same contraction.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        return ops.norm_scale_aggregate(flat, scale, interpret=interpret)
+    x = flat.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    return sq, jnp.tensordot(scale.astype(jnp.float32), x, axes=(0, 0))

@@ -66,6 +66,13 @@ def main():
                          "device and clients divide the device count)")
     ap.add_argument("--engine", default="vmap", choices=["vmap", "scan"])
     ap.add_argument("--agg-backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--scan-group", type=int, default=2,
+                    help="clients per scan group (--engine scan)")
+    ap.add_argument("--cache-groups", type=int, default=8,
+                    help="bounded HBM update cache: groups whose pass-1 "
+                         "update matrices are kept so the post-plan aggregate "
+                         "needs no recompute (0 = two-pass recompute; "
+                         ">= clients/scan-group = single-pass)")
     args = ap.parse_args()
 
     cfg = get(args.arch)
@@ -74,14 +81,25 @@ def main():
         n_clients=args.clients, expected_clients=args.expected, sampler=args.sampler,
         local_steps=args.local_steps, lr_local=args.lr_local,
         round_engine=args.engine, agg_backend=args.agg_backend,
+        scan_group=args.scan_group, cache_groups=args.cache_groups,
     )
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
 
     n_dev = jax.device_count()
+    # the shard_map round has no scan/cache memory policy (see
+    # docs/architecture.md#limits): an explicit scan request conflicts with
+    # --shard on, and wins over --shard auto (never silently dropped).
+    if args.shard == "on" and args.engine == "scan":
+        raise SystemExit(
+            "--shard on and --engine scan conflict: the shard_map round has "
+            "no scan/cache memory policy (docs/architecture.md#limits) — "
+            "drop one of the two flags"
+        )
     shard = args.shard == "on" or (
         args.shard == "auto" and n_dev > 1 and fl.n_clients % n_dev == 0
+        and args.engine != "scan"
     )
     mesh = None
     if shard:

@@ -1,0 +1,140 @@
+"""The fused norm+aggregate kernel and the bounded update cache.
+
+Gates the single-pass scan engine's two new pieces: (a) the Pallas kernel
+that emits per-client squared norms AND the Eq. 2 aggregate from one HBM
+tile stream (kernels/norm_aggregate.py) against its jnp oracle, across
+uneven group/feature padding; (b) the cache semantics — cache-hit vs
+spill-recompute parity for every cache size, on both backends, and the
+analytic local_update_evals accounting the benchmark artifact records."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.fl.engine import RoundEngine
+from repro.fl.round import client_weights
+from repro.kernels import ops, ref, update_cache
+from repro.models.simple import mlp_classifier
+
+
+@pytest.mark.parametrize("clients", [1, 3, 8])
+@pytest.mark.parametrize("d,chunk", [(64, 16), (1000, 128), (4096, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_norm_aggregate_kernel_sweep(clients, d, chunk, dtype):
+    """Kernel vs jnp oracle for BOTH outputs, incl. uneven D/chunk padding
+    (d=1000, chunk=128 pads 24 zero columns) and odd client counts."""
+    key = jax.random.PRNGKey(clients * d + 1)
+    x = (jax.random.normal(key, (clients, d)) * 3).astype(dtype)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.6, (clients,))
+    scale = jnp.where(
+        mask, jax.random.uniform(jax.random.fold_in(key, 2), (clients,)) * 4, 0.0
+    )
+    sq, agg = ops.norm_scale_aggregate(x, scale, chunk=chunk, interpret=True)
+    sq_ref, agg_ref = ref.norm_scale_aggregate_ref(x, scale)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_ref), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_ref), rtol=tol, atol=tol)
+
+
+def test_norm_aggregate_matches_separate_kernels():
+    """The fused stream must reproduce the two single-purpose kernels bit for
+    bit in f32 (same reduction order per output): client_sqnorms for the norm
+    half, masked_scale_aggregate for the Eq. 2 half."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (5, 300), jnp.float32)
+    scale = jax.random.uniform(jax.random.fold_in(key, 1), (5,))
+    sq, agg = ops.norm_scale_aggregate(x, scale, chunk=64, interpret=True)
+    sq_sep = ops.client_sqnorms(x, chunk=64, interpret=True)
+    agg_sep = ops.masked_scale_aggregate(x, scale, chunk=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sq), np.asarray(sq_sep))
+    np.testing.assert_array_equal(np.asarray(agg), np.asarray(agg_sep))
+
+
+def test_group_norm_aggregate_backend_parity():
+    """update_cache.group_norm_aggregate: the pallas fused stream and the jnp
+    oracle give the same (sqnorms, partial) — the property that makes cache
+    semantics backend-independent."""
+    key = jax.random.PRNGKey(4)
+    flat = jax.random.normal(key, (6, 123), jnp.float32)
+    scale = jax.random.uniform(jax.random.fold_in(key, 1), (6,))
+    sq_p, agg_p = update_cache.group_norm_aggregate(flat, scale, "pallas",
+                                                    interpret=True)
+    sq_j, agg_j = update_cache.group_norm_aggregate(flat, scale, "jnp")
+    np.testing.assert_allclose(np.asarray(sq_p), np.asarray(sq_j), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(agg_p), np.asarray(agg_j), rtol=1e-5,
+                               atol=1e-5)
+
+
+def _workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
+    init, loss, _ = mlp_classifier(din, classes, hidden=8)
+    rng = np.random.default_rng(seed)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(n, steps, b, din)).astype("float32")),
+        "y": jnp.asarray(rng.integers(0, classes, (n, steps, b)).astype("int32")),
+    }
+    return init, loss, batch
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("fl_kw", [{}, {"compression": "randk",
+                                        "compression_param": 0.5}],
+                         ids=["plain", "randk"])
+def test_cache_hit_vs_spill_parity(backend, fl_kw):
+    """Every cache size — 0 (all spill/recompute), partial (hits AND spills
+    in one round), full (no recompute) — yields identical masks and allclose
+    params: the cache must be invisible to the round's semantics."""
+    init, loss, batch = _workload()
+    fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs",
+                  local_steps=2, lr_local=0.1, **fl_kw)
+    params = init(jax.random.PRNGKey(0))
+    w = client_weights(fl)
+    key = jax.random.PRNGKey(21)
+    outs = {}
+    for cg in (0, 1, 2, 4):  # scan_group=2 -> 4 groups; 1 and 2 are partial
+        step = jax.jit(
+            RoundEngine(loss, fl, memory="scan", backend=backend, scan_group=2,
+                        cache_groups=cg).make_step()
+        )
+        outs[cg] = step(params, (), batch, w, key)
+    p_ref, _, m_ref = outs[0]
+    assert int(jnp.sum(m_ref.mask)) > 0
+    for cg, (p2, _, m2) in outs.items():
+        assert np.array_equal(np.asarray(m_ref.mask), np.asarray(m2.mask)), cg
+        np.testing.assert_allclose(np.asarray(m_ref.norms), np.asarray(m2.norms),
+                                   atol=1e-6, err_msg=str(cg))
+        for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                       err_msg=str(cg))
+
+
+def test_local_update_evals_accounting():
+    """The analytic per-round local_update count (what the schema-3 bench
+    artifact records): n for vmap and fully-cached scan, 2n for cache-off
+    scan, linear in the spilled clients between."""
+    init, loss, _ = _workload()
+    fl = FLConfig(n_clients=8, expected_clients=3)
+    mk = lambda **kw: RoundEngine(loss, fl, **kw).local_update_evals
+    assert mk(memory="vmap") == 8
+    assert mk(memory="scan", scan_group=2, cache_groups=0) == 16   # two-pass
+    assert mk(memory="scan", scan_group=2, cache_groups=4) == 8    # full cache
+    assert mk(memory="scan", scan_group=2, cache_groups=99) == 8   # clamped
+    assert mk(memory="scan", scan_group=2, cache_groups=3) == 10   # 1 group spills
+    assert update_cache.local_update_evals(8, 2, 1) == 14
+    assert update_cache.num_slots(99, 4) == 4
+    assert update_cache.cache_bytes(3, 2, 100) == 3 * 2 * 100 * 4
+
+
+def test_config_validates_cache_groups():
+    """FLConfig rejects a negative cache capacity (and bad scan_group) at
+    construction, before any engine is built."""
+    with pytest.raises(ValueError, match="cache_groups"):
+        FLConfig(cache_groups=-1)
+    with pytest.raises(ValueError, match="scan_group"):
+        FLConfig(scan_group=0)
+    init, loss, _ = _workload()
+    with pytest.raises(ValueError, match="cache_groups"):
+        RoundEngine(loss, FLConfig(), cache_groups=-2)

@@ -1,8 +1,10 @@
 """Round-engine parity: the (vmap | scan) x (jnp | pallas) matrix produces
 bitwise-identical sampling decisions and allclose aggregates for the same
 round key — including the configs the old scan path silently dropped
-(compression, partial availability) — plus the fused masked-aggregate kernel
-vs its oracle and the unified round_bits accounting."""
+(compression, partial availability) and every update-cache size of the
+single-pass scan engine (0 = all-recompute, partial = hits and spills in one
+round, full = no recompute) — plus the fused masked-aggregate kernel vs its
+oracle and the unified round_bits accounting."""
 
 import itertools
 
@@ -20,6 +22,12 @@ from repro.kernels import ops, ref
 from repro.models.simple import mlp_classifier
 
 COMBOS = list(itertools.product(["vmap", "scan"], ["jnp", "pallas"]))
+
+# the full parity matrix: vmap combos plus the scan combos at every cache
+# regime (None = the engine/config default, i.e. fully cached at these sizes)
+ENGINES = [("vmap", be, None) for be in ("jnp", "pallas")] + [
+    ("scan", be, cg) for be in ("jnp", "pallas") for cg in (None, 0, 1)
+]
 
 
 def _workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
@@ -45,7 +53,8 @@ def _workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
 )
 def test_engine_matrix_parity(fl_kw):
     """Same key => identical norms/probs/mask and allclose params across all
-    four engine combinations (acceptance criterion of the engine refactor)."""
+    engine combinations — including single-pass scan at every cache regime
+    vs vmap (acceptance criterion of the engine refactors)."""
     init, loss, batch = _workload()
     fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
                   lr_local=0.1, **fl_kw)
@@ -53,12 +62,13 @@ def test_engine_matrix_parity(fl_kw):
     w = client_weights(fl)
     key = jax.random.PRNGKey(7)
     outs = {}
-    for mem, be in COMBOS:
+    for mem, be, cg in ENGINES:
         step = jax.jit(
-            RoundEngine(loss, fl, memory=mem, backend=be, scan_group=4).make_step()
+            RoundEngine(loss, fl, memory=mem, backend=be, scan_group=4,
+                        cache_groups=cg).make_step()
         )
-        outs[(mem, be)] = step(params, (), batch, w, key)
-    p_ref, _, m_ref = outs[("vmap", "jnp")]
+        outs[(mem, be, cg)] = step(params, (), batch, w, key)
+    p_ref, _, m_ref = outs[("vmap", "jnp", None)]
     assert int(jnp.sum(m_ref.mask)) > 0  # the round actually sampled someone
     for combo, (p2, _, m2) in outs.items():
         assert np.array_equal(np.asarray(m_ref.mask), np.asarray(m2.mask)), combo
@@ -85,10 +95,11 @@ def test_engine_matrix_parity_server_opt():
     w = client_weights(fl)
     key = jax.random.PRNGKey(11)
     finals = []
-    for mem, be in COMBOS:
+    for mem, be, cg in ENGINES:
         opt = sgd(0.5, momentum=0.9)
         step = jax.jit(
-            RoundEngine(loss, fl, opt, memory=mem, backend=be, scan_group=2).make_step()
+            RoundEngine(loss, fl, opt, memory=mem, backend=be, scan_group=2,
+                        cache_groups=cg).make_step()
         )
         params, state = params0, opt.init(params0)
         for k in range(3):

@@ -70,7 +70,9 @@ def test_tree_shard_aggregate_matches_tree_masked_aggregate():
 
 def test_shard_round_rejects_compression():
     """A compressing config must be rejected on the shard path, not silently
-    aggregated uncompressed (which would mis-bill round_bits)."""
+    aggregated uncompressed (which would mis-bill round_bits) — and the error
+    must carry the remediation (mesh=None engine / unset fl.compression) plus
+    the docs/architecture.md#limits cross-link."""
     from repro.configs.base import FLConfig
     from repro.fl.engine import make_engine
     from repro.models.simple import mlp_classifier
@@ -79,8 +81,12 @@ def test_shard_round_rejects_compression():
     _, loss, _ = mlp_classifier(4, 2, hidden=4)
     fl = FLConfig(n_clients=4, expected_clients=2, compression="randk",
                   compression_param=0.5)
-    with pytest.raises(ValueError, match="compression"):
+    with pytest.raises(ValueError, match="compression") as err:
         make_engine(loss, fl, mesh=mesh)
+    msg = str(err.value)
+    assert "mesh=None" in msg                         # remediation 1
+    assert "compression='none'" in msg                # remediation 2
+    assert "docs/architecture.md#limits" in msg       # docs anchor
 
 
 def test_mesh_level_wrapper_one_device():

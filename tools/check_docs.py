@@ -8,8 +8,10 @@ doc tooling (pydocstyle is not a dependency of this repo):
    every `tests/....py::test_name` reference resolves to a real test function;
 2. the public API modules carry docstrings on every public def/class, and the
    specific anchor objects cite the paper equations they implement;
-3. docs/architecture.md documents the collective table and the benchmark
-   artifact schema, and README links both docs files.
+3. docs/architecture.md documents the collective table, the scan-engine
+   dataflow and the benchmark artifact schema; docs/benchmarks.md documents
+   the bench recipe and the schema-3 field contract; README links all three
+   docs files.
 
 Pure stdlib + AST: nothing is imported from the package, so the check runs in
 seconds with no jax initialisation.
@@ -35,8 +37,13 @@ DOCSTRING_CONTRACT = [
     ("src/repro/core/improvement.py", "improvement_factors", ["alpha", "gamma"]),
     ("src/repro/kernels/ops.py", None, ["Eq. 2", "docs/paper_map.md"]),
     ("src/repro/kernels/ops.py", "masked_scale_aggregate", ["scale_i * U_i"]),
+    ("src/repro/kernels/ops.py", "norm_scale_aggregate", ["Alg. 1 line 3", "Eq. 2"]),
     ("src/repro/kernels/ops.py", "shard_masked_aggregate", ["Eq. 2", "psum"]),
     ("src/repro/kernels/ops.py", "sharded_masked_aggregate", ["psum"]),
+    ("src/repro/kernels/norm_aggregate.py", None, ["Alg. 1 line 3", "Eq. 2", "one HBM read"]),
+    ("src/repro/kernels/update_cache.py", None, ["Eq. 7", "cache_groups", "spill"]),
+    ("src/repro/kernels/update_cache.py", "group_norm_aggregate", ["Eq. 2"]),
+    ("src/repro/kernels/update_cache.py", "local_update_evals", ["2n"]),
     ("src/repro/fl/engine.py", None, ["Eq. 2", "Appendix E"]),
     ("src/repro/fl/engine.py", "make_engine", ["Alg. 2", "Eq. 2"]),
     ("src/repro/fl/engine.py", "RoundEngine", ["Eq. 7", "Eq. 2"]),
@@ -51,13 +58,27 @@ FULL_COVERAGE_MODULES = [
     "src/repro/core/improvement.py",
     "src/repro/kernels/ops.py",
     "src/repro/kernels/masked_aggregate.py",
+    "src/repro/kernels/norm_aggregate.py",
     "src/repro/kernels/sharded_aggregate.py",
+    "src/repro/kernels/update_cache.py",
     "src/repro/fl/engine.py",
     "src/repro/fl/shard_round.py",
 ]
 
-ARCHITECTURE_MUSTS = ["all_gather", "psum", '"schema": 2', "mesh_axis_size"]
-README_MUSTS = ["docs/paper_map.md", "docs/architecture.md"]
+ARCHITECTURE_MUSTS = [
+    "all_gather", "psum", '"schema": 3', "mesh_axis_size",
+    # the scan-engine dataflow section (two-pass vs single-pass + memory
+    # formulas) must survive future edits
+    "Scan engine dataflow", "cache_groups·scan_group·d", "## Limits",
+]
+# docs/benchmarks.md: the run recipe, the schema-3 field contract, and the
+# default-gating policy — enforced so the CI docs job catches drift between
+# the harness and its documentation.
+BENCHMARKS_MUSTS = [
+    "bench_round_engine", "local_update_evals", "--smoke", "cache_groups",
+    "us_per_round", "pallas_interpret", "round_engine.json",
+]
+README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md"]
 
 
 def fail(errors: list, msg: str) -> None:
@@ -152,6 +173,14 @@ def check_static_docs(errors: list) -> None:
     for must in ARCHITECTURE_MUSTS:
         if must not in text:
             fail(errors, f"docs/architecture.md no longer documents {must!r}")
+    bench = ROOT / "docs" / "benchmarks.md"
+    if not bench.exists():
+        fail(errors, "docs/benchmarks.md is missing")
+    else:
+        btext = bench.read_text()
+        for must in BENCHMARKS_MUSTS:
+            if must not in btext:
+                fail(errors, f"docs/benchmarks.md no longer documents {must!r}")
     readme = (ROOT / "README.md").read_text()
     for must in README_MUSTS:
         if must not in readme:
