@@ -32,7 +32,7 @@ def run(rounds=40, n=32, m=3):
         t0 = time.time()
         h = run_method(ds, ev, init, loss, acc, rounds=rounds, n=n,
                        local_steps=5, **kw)
-        accs = [a for _, a in h.acc]
+        accs = h.acc
         results[name] = {
             "final_acc": accs[-1], "final_loss": h.loss[-1],
             "alpha_mean": float(np.mean(h.alpha[5:])), "total_bits": h.bits[-1],

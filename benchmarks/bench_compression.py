@@ -46,7 +46,7 @@ def run(rounds=40, n=32, m=3):
             ds, init, loss, fl, rounds=rounds, batch_size=20,
             eval_fn=jax.jit(acc), eval_batch=ev, eval_every=10, seed=1,
         )
-        accs = [a for _, a in h.acc]
+        accs = h.acc
         results[name] = {"final_acc": accs[-1], "total_bits": h.bits[-1],
                          "final_loss": h.loss[-1]}
         csv_line(f"compression_{name}", (time.time() - t0) / rounds * 1e6,

@@ -40,7 +40,7 @@ def run(rounds=50, datasets=(1, 2, 3), target=0.85, n=32):
         for name, kw in methods.items():
             t0 = time.time()
             h = run_method(ds, ev, init, loss, acc, rounds=rounds, n=n, **kw)
-            accs = [a for _, a in h.acc]
+            accs = h.acc
             btt = bits_to_target(h, target)
             results[f"d{did}/{name}"] = {
                 "final_acc": accs[-1],
@@ -48,6 +48,7 @@ def run(rounds=50, datasets=(1, 2, 3), target=0.85, n=32):
                 "alpha_mean": float(np.mean(h.alpha[5:])),
                 "total_bits": h.bits[-1],
                 "bits_to_target": btt,
+                "acc_rounds": h.acc_rounds,
                 "acc_curve": h.acc,
                 "bits_curve": h.bits[::5],
                 "loss_curve": h.loss[::5],

@@ -44,11 +44,11 @@ def run(rounds=80, pool=240, hidden=128):
         t0 = time.time()
         h = run_method(ds, ev, init, loss, acc, rounds=rounds, n=n,
                        local_steps=6, batch_size=8, **kw)
-        accs = [a for _, a in h.acc]
+        accs = h.acc
         results[name] = {
             "final_acc": accs[-1], "final_loss": h.loss[-1],
             "alpha_mean": float(np.mean(h.alpha[5:])), "total_bits": h.bits[-1],
-            "acc_curve": h.acc, "bits_curve": h.bits[::5],
+            "acc_rounds": h.acc_rounds, "acc_curve": h.acc, "bits_curve": h.bits[::5],
         }
         us = (time.time() - t0) / rounds * 1e6
         csv_line(f"shakespeare_{name}", us,

@@ -1,0 +1,142 @@
+"""Sim-driver mode benchmark: rounds/sec for the host loop vs the prefetched
+pool pipeline vs scan-over-rounds, on one registered scenario.
+
+The three modes of ``repro.sim.driver.run_simulation`` execute identical
+round semantics (bitwise-identical masks — asserted here per run), so their
+throughput difference is pure execution policy:
+
+- ``host``     — legacy numpy batch assembly + upload, synchronous per round;
+- ``prefetch`` — device-resident ClientPool, round k+1's gather dispatched
+  while round k computes, no per-round host sync;
+- ``scan``     — blocks of ``rounds_per_scan`` rounds inside one jitted
+  ``lax.scan`` (no per-round dispatch at all).
+
+``rounds_per_sec`` is steady-state (the driver excludes the first
+round/block, which pays compilation).  The artifact gate: the prefetched and
+scan paths must be no slower than the host loop — the whole point of the
+subsystem (asserted in :func:`run`; the committed
+``benchmarks/artifacts/sim.json`` is the CPU baseline).
+
+Artifact: ``benchmarks/artifacts/sim.json`` (schema 1, field contract in
+docs/architecture.md §Simulation subsystem).  ``--smoke`` runs the reduced
+scenario and asserts the artifact contract without timing gates (the CI
+``sim-smoke`` step).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.sim.driver import run_scenario, validate_ledger
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+SCHEMA = 1
+
+# keys every per-mode entry must carry (checked by smoke() / the CI sim-smoke step)
+MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s", "sent_total"}
+
+
+def run(
+    scenario: str = "femnist1-fedavg-aocs",
+    rounds: int = 48,
+    rounds_per_scan: int = 8,
+    seed: int = 0,
+    reps: int = 3,
+    reduced: bool = False,
+    artifact: str = "sim.json",
+    assert_speed: bool = True,
+):
+    """Time all three driver modes on ``scenario``; writes the schema-1 artifact.
+
+    Each mode runs ``reps`` times and records its best steady-state
+    ``rounds_per_sec`` (per-run variance on a shared CPU is a few percent;
+    best-of-N is the usual microbenchmark answer).  ``assert_speed``
+    enforces the subsystem's acceptance gate — prefetch and scan at least as
+    fast as the host loop — and is left off in smoke runs whose shapes are
+    too tiny to time meaningfully.
+    """
+    os.makedirs(ART, exist_ok=True)
+    results = {"schema": SCHEMA, "scenario": scenario, "workload": None, "modes": {}}
+    ledgers = {}
+    for mode in ("host", "prefetch", "scan"):
+        led = None
+        for _ in range(max(reps, 1)):
+            _, rep_led = run_scenario(
+                scenario, reduced=reduced, mode=mode, rounds=rounds,
+                rounds_per_scan=rounds_per_scan, seed=seed,
+            )
+            if led is None or rep_led.rounds_per_sec > led.rounds_per_sec:
+                led = rep_led
+        validate_ledger(led.to_json())
+        ledgers[mode] = led
+        if results["workload"] is None:
+            results["workload"] = {**led.workload, "fl": led.fl,
+                                   "reps": max(reps, 1),
+                                   "reduced": bool(reduced)}
+        entry = {
+            "mode": mode,
+            "rounds_per_sec": led.rounds_per_sec,
+            "us_per_round": 1e6 / led.rounds_per_sec,
+            "wall_s": led.wall_s,
+            "sent_total": int(np.sum(led.sent)),
+        }
+        if mode == "scan":
+            entry["rounds_per_scan"] = rounds_per_scan
+        if mode != "host":
+            entry["pool_bytes"] = led.workload.get("pool_bytes")
+        results["modes"][mode] = entry
+        csv_line(
+            f"sim_{mode}", entry["us_per_round"],
+            f"rps={led.rounds_per_sec:.1f};sent={entry['sent_total']}"
+            f";loss={led.loss[-1]:.4f}",
+        )
+    # the comparison is only meaningful if every mode made identical decisions
+    for mode in ("prefetch", "scan"):
+        for k in range(rounds):
+            assert np.array_equal(ledgers["host"].masks[k], ledgers[mode].masks[k]), (
+                mode, k, "mask divergence",
+            )
+    if assert_speed:
+        host_rps = results["modes"]["host"]["rounds_per_sec"]
+        for mode in ("prefetch", "scan"):
+            rps = results["modes"][mode]["rounds_per_sec"]
+            assert rps >= 0.98 * host_rps, (
+                f"{mode} ({rps:.1f} rounds/s) slower than the host loop "
+                f"({host_rps:.1f} rounds/s) — the pipeline gate failed"
+            )
+    with open(os.path.join(ART, artifact), "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def smoke():
+    """CI gate: reduced-scenario run + schema-1 artifact contract assertions.
+
+    Checks the artifact shape (schema marker, per-mode key set, the scan
+    block size, pool bytes on the pooled modes) and the cross-mode mask
+    parity that :func:`run` always enforces; timing gates are skipped at
+    smoke shapes.  Writes its own (git-ignored) artifact so a local smoke
+    never clobbers the committed sim.json CPU baseline.
+    """
+    res = run(rounds=6, rounds_per_scan=3, reps=1, reduced=True,
+              artifact="sim_smoke.json", assert_speed=False)
+    assert res["schema"] == SCHEMA, res["schema"]
+    assert {"rounds", "batch_size", "pool_clients", "model_dim", "fl",
+            "backend_platform"} <= set(res["workload"])
+    for mode in ("host", "prefetch", "scan"):
+        assert mode in res["modes"], mode
+        assert MODE_KEYS <= set(res["modes"][mode]), mode
+        assert res["modes"][mode]["rounds_per_sec"] > 0, mode
+    assert res["modes"]["scan"]["rounds_per_scan"] == 3
+    assert res["modes"]["prefetch"]["pool_bytes"] > 0
+    print("sim bench smoke OK (schema 1)")
+
+
+if __name__ == "__main__":
+    smoke() if "--smoke" in sys.argv[1:] else run()

@@ -14,7 +14,7 @@ from repro.fl.trainer import run_training
 
 def bits_to_target(hist, target_acc):
     """First cumulative-bits value at which eval accuracy >= target."""
-    for (k, a) in hist.acc:
+    for k, a in zip(hist.acc_rounds, hist.acc):
         if a >= target_acc:
             return hist.bits[min(k, len(hist.bits) - 1)]
     return None

@@ -30,6 +30,7 @@ def main() -> None:
         bench_roofline,
         bench_round_engine,
         bench_shakespeare,
+        bench_sim,
         bench_stepsize,
         bench_variance,
     )
@@ -51,6 +52,8 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(),
         # round-engine matrix: (vmap|scan) x (jnp|pallas) µs/round
         "round_engine": lambda: bench_round_engine.run(reps=10 if args.full else 5),
+        # sim-driver modes: host loop vs prefetched pool vs scan-over-rounds
+        "sim": lambda: bench_sim.run(rounds=96 if args.full else 48),
         # deliverable (g): roofline table from dry-run artifacts
         "roofline": lambda: bench_roofline.run(),
     }

@@ -41,7 +41,7 @@ def main():
             ds, init, loss, fl, rounds=args.rounds, batch_size=20,
             eval_fn=jax.jit(acc), eval_batch=ev, eval_every=10, seed=1,
         )
-        accs = [a for _, a in hist.acc]
+        accs = hist.acc
         print(
             f"{sampler:8s} eta_l={lr:<8} final acc {accs[-1]:.3f} "
             f"loss {hist.loss[-1]:.3f} alpha~{np.mean(hist.alpha[10:]):.2f} "

@@ -41,7 +41,7 @@ def main():
             ds, init, loss, fl, rounds=args.rounds, batch_size=8,
             eval_fn=jax.jit(acc), eval_batch=ev, eval_every=10, seed=1,
         )
-        accs = [a for _, a in hist.acc]
+        accs = hist.acc
         print(f"{sampler:8s} eta_l={lr:<6} next-char acc {accs[-1]:.3f} "
               f"loss {hist.loss[-1]:.3f} uplink {hist.bits[-1]/1e9:.2f} Gbit")
 

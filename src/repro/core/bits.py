@@ -31,6 +31,13 @@ class BitsLedger:
     def update_bits(self) -> int:
         return self.model_dim * self.bits_per_param
 
+    def broadcast_bits(self, n_receivers: int) -> int:
+        """Master->client downlink for one round: the model broadcast to the
+        ``n_receivers`` cohort clients.  The paper's x-axis metric excludes
+        this (footnote 5); the sim ledger reports it as a separate series,
+        never folded into the uplink bill."""
+        return n_receivers * self.update_bits()
+
     def round_bits(self, mask, sampler: str, n: int, j_used: int = 4,
                    compression: str = "none", compression_param: float = 0.0):
         """Uplink bits for one communication round given the realized mask."""

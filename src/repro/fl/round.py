@@ -54,3 +54,16 @@ def round_bits(fl: FLConfig, model_dim: int, mask) -> int:
         mask, fl.sampler, fl.n_clients, fl.j_max,
         fl.compression, fl.compression_param,
     )
+
+
+def round_bits_duplex(fl: FLConfig, model_dim: int, mask) -> tuple:
+    """``(uplink, downlink)`` bits for one round.
+
+    Uplink is :func:`round_bits` (the paper's metric).  Downlink is the
+    master's model broadcast to the round's ``fl.n_clients`` cohort — the
+    paper excludes it (footnote 5), so the sim ledger carries it as its own
+    series and never adds it to the uplink bill.
+    """
+    up = round_bits(fl, model_dim, mask)
+    down = BitsLedger(model_dim).broadcast_bits(fl.n_clients)
+    return up, down

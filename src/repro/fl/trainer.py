@@ -1,23 +1,36 @@
-"""Host-side federated training loop: per-round client-pool sampling (the
-paper samples n available clients uniformly from the pool each round), batch
-assembly, the jitted round step, and metric/bits bookkeeping."""
+"""Host-side federated training entry point — a thin wrapper over the
+cohort-streaming simulation driver (repro/sim/driver.py).
+
+``run_training`` keeps its historical signature (the examples, benchmarks
+and integration tests all call it) but delegates every round to
+``repro.sim.driver.run_simulation``: by default the double-buffered
+``'prefetch'`` pipeline of the device-resident client pool, with ``'host'``
+(the legacy synchronous loop) and ``'scan'`` (scan-over-rounds) selectable
+via ``mode``.  For a fixed seed every mode draws **bitwise-identical**
+per-round participation masks to the legacy loop this module used to
+implement inline (gated by tests/test_sim.py).
+"""
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.fl.engine import RoundEngine
-from repro.fl.round import client_weights, round_bits
 
 
 @dataclass
 class History:
+    """Per-round training curves; every field is a flat scalar series.
+
+    The eval curve is split into ``acc_rounds`` (the round indices evaluated)
+    and ``acc`` (the values) — an earlier version stored ``(round, value)``
+    tuples in one field, which made ``as_arrays()`` ragged.
+    """
+
     loss: list = field(default_factory=list)
+    acc_rounds: list = field(default_factory=list)  # rounds at which acc was taken
     acc: list = field(default_factory=list)
     bits: list = field(default_factory=list)       # cumulative uplink bits
     alpha: list = field(default_factory=list)
@@ -41,40 +54,35 @@ def run_training(
     seed: int = 0,
     local_epoch: bool = True,
     server_opt=None,
+    mode: str = "prefetch",
+    rounds_per_scan: int = 8,
 ):
     """Train for ``rounds`` communication rounds; returns (params, History).
 
     ``local_epoch``: paper setting — each client runs 1 epoch over its local
     data per round, so the number of local steps varies with client size
     (capped at fl.local_steps buckets of ``batch_size``).
-    """
-    rng = np.random.default_rng(seed)
-    key = jax.random.PRNGKey(seed)
-    params = init_fn(jax.random.fold_in(key, 1))
-    dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
-    # engine (memory policy x agg backend) comes from the config; the old
-    # params/opt-state buffers are donated — the round step overwrites them
-    # in place instead of holding both generations live.
-    engine = RoundEngine(loss_fn, fl, server_opt)
-    round_step = jax.jit(engine.make_step(), donate_argnums=(0, 1))
-    weights = client_weights(fl)
-    hist = History()
-    total_bits = 0
-    opt_state = server_opt.init(params) if server_opt is not None else ()
 
-    for k in range(rounds):
-        clients = rng.choice(dataset.n_clients, size=fl.n_clients, replace=False)
-        batch = dataset.sample_round_batches(rng, clients, fl.local_steps, batch_size)
-        batch = {k_: jnp.asarray(v) for k_, v in batch.items()}
-        params, opt_state, metrics = round_step(
-            params, opt_state, batch, weights, jax.random.fold_in(key, 1000 + k)
-        )
-        total_bits += int(round_bits(fl, dim, metrics.mask))
-        hist.loss.append(float(metrics.loss))
-        hist.alpha.append(float(metrics.alpha))
-        hist.gamma.append(float(metrics.gamma))
-        hist.sent.append(int(metrics.sent_clients))
-        hist.bits.append(total_bits)
-        if eval_fn is not None and (k % eval_every == 0 or k == rounds - 1):
-            hist.acc.append((k, float(eval_fn(params, eval_batch))))
+    ``mode`` selects the simulation driver's execution path ('host' |
+    'prefetch' | 'scan'); ``rounds_per_scan`` sizes the 'scan' blocks.  All
+    modes produce identical masks and allclose parameters for the same seed;
+    'scan' evaluates once per block instead of on the ``eval_every`` grid.
+    """
+    from repro.sim.driver import run_simulation
+
+    params, ledger = run_simulation(
+        dataset, init_fn, loss_fn, fl, rounds,
+        batch_size=batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
+        eval_fn=eval_fn, eval_batch=eval_batch, eval_every=eval_every,
+        seed=seed, local_epoch=local_epoch, server_opt=server_opt,
+    )
+    hist = History(
+        loss=list(ledger.loss),
+        acc_rounds=list(ledger.acc_rounds),
+        acc=list(ledger.acc),
+        bits=list(ledger.uplink_bits),
+        alpha=list(ledger.alpha),
+        gamma=list(ledger.gamma),
+        sent=list(ledger.sent),
+    )
     return params, hist

@@ -1,5 +1,6 @@
 """Training driver: federated training of any assigned architecture (reduced
-or full) with OCS, on the local device set or a forced-host-device mesh.
+or full) with OCS, on the local device set or a forced-host-device mesh —
+or a registered simulation scenario through the cohort-streaming sim driver.
 
 Engine selection is mesh-aware (fl.engine.make_engine): with more than one
 device (or ``--shard on``) the client dimension shards over a 1-D ``data``
@@ -7,17 +8,27 @@ mesh and the round runs through fl/shard_round.py's explicit collectives —
 ``--agg-backend pallas`` then aggregates via the per-shard fused kernel plus
 one cross-shard psum (kernels/sharded_aggregate.py).
 
+``--scenario NAME`` instead runs one cell of the paper's experiment grid
+(repro/sim/scenarios.py) through ``repro.sim.driver``: ``--prefetch``
+selects the double-buffered device-pool pipeline vs the legacy host loop,
+``--sim-rounds-per-scan N`` (N > 0) the scan-over-rounds fast path.  The
+ledger artifact lands under benchmarks/artifacts/sim/.
+
 Examples (CPU container — reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
       --rounds 20 --clients 8 --expected 2 --sampler aocs
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
       --clients 8 --shard on --agg-backend pallas
+  PYTHONPATH=src python -m repro.launch.train --scenario list
+  PYTHONPATH=src python -m repro.launch.train \\
+      --scenario femnist1-fedavg-aocs --reduced --sim-rounds-per-scan 8
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -48,10 +59,59 @@ def synthetic_token_batch(rng, cfg, n, r, b, s):
     return {k: jnp.asarray(v) for k, v in batch.items()}
 
 
+def run_scenario_cli(args):
+    """The ``--scenario`` branch: one experiment-grid cell via repro.sim."""
+    from repro.sim.driver import run_scenario
+    from repro.sim.scenarios import get_scenario, list_scenarios
+
+    if args.scenario == "list":
+        for name in list_scenarios():
+            sc = get_scenario(name)
+            print(f"{name:40s} {sc.paper}")
+        return
+    if args.sim_rounds_per_scan > 0:
+        mode = "scan"
+    else:
+        mode = "prefetch" if args.prefetch == "on" else "host"
+    sc = get_scenario(args.scenario)
+    effective = sc.reduced() if args.reduced else sc
+    # the artifact path carries the effective (possibly -reduced) name, so a
+    # reduced smoke never clobbers a full run's ledger
+    artifact = os.path.join(
+        "benchmarks", "artifacts", "sim", f"{effective.name}-{mode}.json"
+    )
+    print(f"[sim] scenario {effective.name} ({sc.paper}) mode={mode} "
+          f"rounds={args.rounds if args.rounds is not None else effective.rounds}")
+    _, ledger = run_scenario(
+        sc.name, reduced=args.reduced, mode=mode, rounds=args.rounds,
+        rounds_per_scan=max(args.sim_rounds_per_scan, 1), artifact=artifact,
+    )
+    for k, (loss, sent) in enumerate(zip(ledger.loss, ledger.sent)):
+        print(f"[round {k:3d}] loss {loss:.4f} alpha {ledger.alpha[k]:.3f} "
+              f"sent {sent}/{ledger.fl['n_clients']} "
+              f"up {ledger.uplink_bits[k]/1e9:.2f}G down {ledger.downlink_bits[k]/1e9:.2f}G")
+    print(f"[sim] {ledger.rounds_per_sec:.1f} rounds/s (steady-state), "
+          f"artifact {artifact}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--arch", default=None,
+                    help="assigned architecture to train (omit with --scenario)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="communication rounds (default: 10, or the "
+                         "scenario's own rounds with --scenario)")
+    ap.add_argument("--scenario", default=None,
+                    help="run a registered sim scenario instead of an arch "
+                         "workload ('list' prints the registry)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="with --scenario: the seconds-scale reduced variant")
+    ap.add_argument("--prefetch", default="on", choices=["on", "off"],
+                    help="with --scenario: double-buffered device-pool "
+                         "pipeline (on) vs legacy host loop (off)")
+    ap.add_argument("--sim-rounds-per-scan", type=int, default=0,
+                    help="with --scenario: >0 selects the scan-over-rounds "
+                         "fast path with this block length")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--expected", type=int, default=2)
     ap.add_argument("--sampler", default="aocs",
@@ -74,6 +134,13 @@ def main():
                          "needs no recompute (0 = two-pass recompute; "
                          ">= clients/scan-group = single-pass)")
     args = ap.parse_args()
+
+    if args.scenario:
+        return run_scenario_cli(args)
+    if args.arch is None:
+        ap.error("one of --arch or --scenario is required")
+    if args.rounds is None:
+        args.rounds = 10
 
     cfg = get(args.arch)
     model = build_model(cfg, remat=False)

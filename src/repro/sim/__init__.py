@@ -1,0 +1,28 @@
+"""repro.sim — cohort-streaming federated simulation subsystem.
+
+Layers the multi-round experiment machinery of the paper's Sec. 4 evaluation
+on top of the single-round ``RoundEngine`` stack:
+
+* :mod:`repro.sim.pool`      — device-resident :class:`ClientPool` serving
+  round cohorts via a double-buffered host→device prefetch pipeline;
+* :mod:`repro.sim.scenarios` — the named scenario registry encoding the
+  paper's experiment grid;
+* :mod:`repro.sim.driver`    — the multi-round driver (host / prefetch /
+  scan-over-rounds execution), structured metrics ledger, JSON artifacts.
+"""
+
+from repro.sim.driver import (  # noqa: F401
+    SIM_SCHEMA,
+    SimLedger,
+    run_scenario,
+    run_simulation,
+    validate_ledger,
+)
+from repro.sim.pool import ClientPool, RoundPlan, plan_cohort  # noqa: F401
+from repro.sim.scenarios import (  # noqa: F401
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    register,
+)

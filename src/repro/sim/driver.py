@@ -1,0 +1,409 @@
+"""Multi-round simulation driver: the paper's Sec. 4 evaluation loop as a
+subsystem, with a structured metrics ledger and versioned JSON artifacts.
+
+``run_simulation`` replaces the trainer's inner loop with three execution
+modes over the same round semantics:
+
+* ``'host'``     — the legacy baseline: numpy batch assembly + upload every
+  round, synchronous with the jitted step (kept as the benchmark reference);
+* ``'prefetch'`` — the :class:`repro.sim.pool.ClientPool` pipeline: round
+  k+1's cohort plan is drawn and its device gather dispatched while round
+  k's jitted step is still running (double-buffered), and the loop never
+  blocks on device results until the end;
+* ``'scan'``     — scan-over-rounds fast path for fully device-resident
+  pools: blocks of ``rounds_per_scan`` rounds run inside one jitted
+  ``lax.scan`` (cohort gather in the scan body), removing per-round dispatch
+  entirely.  Eval (when requested) runs once per block, at its last round.
+
+All three modes consume the host RNG and the JAX round keys in exactly the
+legacy trainer's order, so for a fixed seed every mode — and the legacy loop
+itself — produces **bitwise-identical per-round participation masks** (the
+parity gate in tests/test_sim.py; the batches match bitwise because
+``plan_cohort`` replays ``sample_round_batches``'s RNG stream).
+
+Every run fills a :class:`SimLedger` — per-round loss / alpha / gamma / sent
+/ expected clients plus cumulative **uplink and downlink** bits
+(``fl.round.round_bits_duplex``; downlink is reported separately because the
+paper's x-axis excludes broadcast, footnote 5) — serialised as a schema-1
+JSON artifact (``validate_ledger`` is the contract both the tests and the
+``bench_sim --smoke`` CI gate assert).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.engine import RoundEngine
+from repro.fl.round import client_weights, round_bits_duplex
+from repro.sim.pool import ClientPool, gather_batch, stack_plans
+from repro.sim.scenarios import get_scenario
+
+SIM_SCHEMA = 1
+MODES = ("host", "prefetch", "scan")
+
+# per-round series every schema-1 ledger must carry, all the same length
+LEDGER_SERIES = (
+    "loss", "alpha", "gamma", "sent", "expected_clients",
+    "uplink_bits", "downlink_bits",
+)
+
+
+@dataclass
+class SimLedger:
+    """Structured metrics ledger of one simulation run (artifact schema 1).
+
+    Per-round series (``LEDGER_SERIES``) plus the eval curve
+    (``acc_rounds``/``acc``, rectangular — no ``(round, value)`` tuples) and
+    the run's throughput.  ``masks``/``norms`` are kept in memory for parity
+    tests and are written to JSON only on request (``include_masks``).
+    """
+
+    mode: str
+    scenario: str | None = None
+    fl: dict = field(default_factory=dict)
+    workload: dict = field(default_factory=dict)
+    loss: list = field(default_factory=list)
+    alpha: list = field(default_factory=list)
+    gamma: list = field(default_factory=list)
+    sent: list = field(default_factory=list)
+    expected_clients: list = field(default_factory=list)
+    uplink_bits: list = field(default_factory=list)      # cumulative
+    downlink_bits: list = field(default_factory=list)    # cumulative
+    acc_rounds: list = field(default_factory=list)
+    acc: list = field(default_factory=list)
+    masks: list = field(default_factory=list)            # (n,) bool per round
+    norms: list = field(default_factory=list)            # (n,) f32 per round
+    wall_s: float = 0.0
+    rounds_per_sec: float = 0.0                          # steady-state (post-compile)
+
+    def to_json(self, include_masks: bool = False) -> dict:
+        """The schema-1 artifact document (see :func:`validate_ledger`)."""
+        doc = {
+            "schema": SIM_SCHEMA,
+            "scenario": self.scenario,
+            "mode": self.mode,
+            "fl": self.fl,
+            "workload": self.workload,
+            "metrics": {
+                "loss": self.loss,
+                "alpha": self.alpha,
+                "gamma": self.gamma,
+                "sent": self.sent,
+                "expected_clients": self.expected_clients,
+                "uplink_bits": self.uplink_bits,
+                "downlink_bits": self.downlink_bits,
+                "acc_rounds": self.acc_rounds,
+                "acc": self.acc,
+            },
+            "wall_s": self.wall_s,
+            "rounds_per_sec": self.rounds_per_sec,
+        }
+        if include_masks:
+            doc["masks"] = [np.asarray(m).astype(int).tolist() for m in self.masks]
+        return doc
+
+    def write(self, path: str, include_masks: bool = False) -> str:
+        """Serialise the ledger as a JSON artifact; returns the path."""
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(include_masks=include_masks), f, indent=1)
+        return path
+
+
+def validate_ledger(doc: dict) -> None:
+    """Assert the schema-1 ledger contract; raises ``ValueError`` on breach.
+
+    The single source of truth for what a sim artifact must contain — the
+    scenario-grid smoke test and the ``bench_sim --smoke`` CI step both call
+    this, so the schema cannot drift silently.
+    """
+    if doc.get("schema") != SIM_SCHEMA:
+        raise ValueError(f"ledger schema {doc.get('schema')!r} != {SIM_SCHEMA}")
+    if doc.get("mode") not in MODES:
+        raise ValueError(f"ledger mode {doc.get('mode')!r} not in {MODES}")
+    for block in ("fl", "workload", "metrics"):
+        if not isinstance(doc.get(block), dict):
+            raise ValueError(f"ledger is missing the {block!r} block")
+    metrics = doc["metrics"]
+    n = None
+    for series in LEDGER_SERIES:
+        vals = metrics.get(series)
+        if not isinstance(vals, list):
+            raise ValueError(f"ledger metrics lack the {series!r} series")
+        if n is None:
+            n = len(vals)
+        if len(vals) != n:
+            raise ValueError(
+                f"ragged ledger: {series!r} has {len(vals)} entries, want {n}"
+            )
+    if not n:
+        raise ValueError("ledger records zero rounds")
+    for series in ("loss", "alpha", "gamma"):
+        if not np.all(np.isfinite(np.asarray(metrics[series], np.float64))):
+            raise ValueError(f"non-finite values in ledger series {series!r}")
+    for series in ("acc_rounds", "acc"):
+        if not isinstance(metrics.get(series), list):
+            raise ValueError(f"ledger metrics lack the {series!r} series")
+    if len(metrics["acc_rounds"]) != len(metrics["acc"]):
+        raise ValueError("acc_rounds and acc series lengths differ")
+    for series in ("uplink_bits", "downlink_bits"):
+        if np.any(np.diff(np.asarray(metrics[series], np.int64)) < 0):
+            raise ValueError(f"cumulative series {series!r} decreases")
+    if "rounds_per_sec" not in doc or "wall_s" not in doc:
+        raise ValueError("ledger lacks throughput fields")
+
+
+def run_simulation(
+    dataset,
+    init_fn,
+    loss_fn,
+    fl,
+    rounds: int,
+    *,
+    batch_size: int = 20,
+    mode: str = "prefetch",
+    rounds_per_scan: int = 8,
+    eval_fn=None,
+    eval_batch=None,
+    eval_every: int = 5,
+    seed: int = 0,
+    local_epoch: bool = True,
+    server_opt=None,
+    scenario_name: str | None = None,
+    artifact: str | None = None,
+) -> tuple:
+    """Run ``rounds`` communication rounds; returns ``(params, SimLedger)``.
+
+    One driver, three execution modes (module docstring); all modes draw the
+    cohort (``rng.choice`` without replacement), the per-client example
+    permutations and the per-round keys (``fold_in(key, 1000 + k)``) in the
+    legacy trainer's exact order, so the per-round participation masks are
+    **bitwise** identical across modes and to the legacy loop for the same
+    seed.  ``fl.weights == 'data_size'`` takes each cohort's slice of
+    ``dataset.sizes()`` (normalized per round) — the legacy loop silently
+    dropped it.  ``artifact`` (a path) serialises the ledger on completion.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown sim mode {mode!r}; want one of {MODES}")
+    if fl.n_clients > dataset.n_clients:
+        raise ValueError(
+            f"FLConfig.n_clients={fl.n_clients} exceeds the dataset's client "
+            f"pool of {dataset.n_clients} clients: each round draws the cohort "
+            f"without replacement, so n_clients must be <= the pool size "
+            f"(shrink FLConfig.n_clients or enlarge the dataset)"
+        )
+    if mode == "scan" and rounds_per_scan < 1:
+        raise ValueError(f"rounds_per_scan must be >= 1, got {rounds_per_scan}")
+
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = init_fn(jax.random.fold_in(key, 1))
+    dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    engine = RoundEngine(loss_fn, fl, server_opt)
+    opt_state = server_opt.init(params) if server_opt is not None else ()
+    sizes = np.asarray(dataset.sizes())
+    uniform_w = client_weights(fl)
+
+    def cohort_weights(clients):
+        # fl.weights == 'data_size' reaches the engine as the cohort's slice
+        # of dataset.sizes(), normalized per round (client_weights).
+        if fl.weights == "data_size":
+            return client_weights(fl, jnp.asarray(sizes[np.asarray(clients)]))
+        return uniform_w
+
+    def draw_cohort():
+        return rng.choice(dataset.n_clients, size=fl.n_clients, replace=False)
+
+    def want_eval(k):
+        return eval_fn is not None and (k % eval_every == 0 or k == rounds - 1)
+
+    dev_metrics = []          # device-side RoundMetrics (stacked blocks in scan)
+    dev_evals = []            # (round, device scalar)
+    t_first, first_units = None, 0
+    t_start = time.time()
+
+    if mode == "host":
+        round_step = jax.jit(engine.make_step(), donate_argnums=(0, 1))
+        for k in range(rounds):
+            clients = draw_cohort()
+            w = cohort_weights(clients)
+            batch = dataset.sample_round_batches(
+                rng, clients, fl.local_steps, batch_size, local_epoch
+            )
+            batch = {bk: jnp.asarray(v) for bk, v in batch.items()}
+            params, opt_state, metrics = round_step(
+                params, opt_state, batch, w, jax.random.fold_in(key, 1000 + k)
+            )
+            dev_metrics.append(metrics)
+            if want_eval(k):
+                dev_evals.append((k, eval_fn(params, eval_batch)))
+            # the host loop is synchronous by construction (legacy behaviour):
+            # it blocks before assembling the next round's batch.
+            jax.block_until_ready(metrics.loss)
+            if t_first is None:
+                t_first, first_units = time.time(), 1
+
+    elif mode == "prefetch":
+        cpool = ClientPool(dataset)
+        round_step = jax.jit(engine.make_step(), donate_argnums=(0, 1))
+
+        def draw_round(k):
+            clients = draw_cohort()
+            plan = cpool.plan(rng, clients, fl.local_steps, batch_size, local_epoch)
+            return plan, cohort_weights(clients), jax.random.fold_in(key, 1000 + k)
+
+        cur = draw_round(0)
+        cur_batch = cpool.gather(cur[0])
+        for k in range(rounds):
+            plan, w, kk = cur
+            batch = cur_batch
+            if k + 1 < rounds:
+                # double buffering: round k+1's plan is drawn and its gather
+                # dispatched while round k's step is still executing.
+                cur = draw_round(k + 1)
+                cur_batch = cpool.gather(cur[0])
+            params, opt_state, metrics = round_step(params, opt_state, batch, w, kk)
+            dev_metrics.append(metrics)
+            if want_eval(k):
+                dev_evals.append((k, eval_fn(params, eval_batch)))
+            if t_first is None:
+                # the only mid-run sync: marks the end of the compile round
+                jax.block_until_ready(metrics.loss)
+                t_first, first_units = time.time(), 1
+
+    else:  # scan-over-rounds
+        cpool = ClientPool(dataset)
+        step_fn = engine.make_step()
+
+        def chunk_fn(buffers, params, opt_state, clients_s, take_s, smask_s,
+                     w_s, keys_s):
+            def body(carry, xs):
+                p, o = carry
+                c, t, sm, w, kk = xs
+                p, o, m = step_fn(p, o, gather_batch(buffers, c, t, sm), w, kk)
+                return (p, o), m
+
+            (params, opt_state), ms = jax.lax.scan(
+                body, (params, opt_state),
+                (clients_s, take_s, smask_s, w_s, keys_s),
+            )
+            return params, opt_state, ms
+
+        chunk = jax.jit(chunk_fn, donate_argnums=(1, 2))
+        done = 0
+        while done < rounds:
+            span = min(rounds_per_scan, rounds - done)
+            plans, w_s, keys_s = [], [], []
+            for k in range(done, done + span):
+                clients = draw_cohort()
+                plans.append(
+                    cpool.plan(rng, clients, fl.local_steps, batch_size, local_epoch)
+                )
+                w_s.append(cohort_weights(clients))
+                keys_s.append(jax.random.fold_in(key, 1000 + k))
+            clients_s, take_s, smask_s = stack_plans(plans)
+            params, opt_state, ms = chunk(
+                cpool.buffers, params, opt_state,
+                jnp.asarray(clients_s), jnp.asarray(take_s), jnp.asarray(smask_s),
+                jnp.stack(w_s), jnp.stack(keys_s),
+            )
+            dev_metrics.append(ms)
+            done += span
+            if eval_fn is not None:
+                # scan granularity: one eval per block, at its last round
+                dev_evals.append((done - 1, eval_fn(params, eval_batch)))
+            if t_first is None:
+                jax.block_until_ready(ms.loss)
+                t_first, first_units = time.time(), span
+
+    jax.block_until_ready(params)
+    if dev_metrics:
+        jax.block_until_ready(dev_metrics[-1].loss)
+    t_end = time.time()
+
+    def rows(name):
+        vals = [np.asarray(getattr(m, name)) for m in dev_metrics]
+        return np.concatenate(vals, 0) if mode == "scan" else np.stack(vals, 0)
+
+    ledger = SimLedger(
+        mode=mode,
+        scenario=scenario_name,
+        fl=dataclasses.asdict(fl),
+        workload={
+            "rounds": rounds,
+            "batch_size": batch_size,
+            "pool_clients": int(dataset.n_clients),
+            "model_dim": dim,
+            "seed": seed,
+            "local_epoch": bool(local_epoch),
+            "backend_platform": jax.default_backend(),
+            **({"rounds_per_scan": rounds_per_scan} if mode == "scan" else {}),
+            **({"pool_bytes": cpool.nbytes} if mode != "host" else {}),
+        },
+    )
+    losses, alphas, gammas = rows("loss"), rows("alpha"), rows("gamma")
+    sents, expected = rows("sent_clients"), rows("expected_clients")
+    masks, norms = rows("mask"), rows("norms")
+    up_total = down_total = 0
+    for k in range(rounds):
+        up, down = round_bits_duplex(fl, dim, masks[k])
+        up_total += int(up)
+        down_total += int(down)
+        ledger.loss.append(float(losses[k]))
+        ledger.alpha.append(float(alphas[k]))
+        ledger.gamma.append(float(gammas[k]))
+        ledger.sent.append(int(sents[k]))
+        ledger.expected_clients.append(float(expected[k]))
+        ledger.uplink_bits.append(up_total)
+        ledger.downlink_bits.append(down_total)
+        ledger.masks.append(masks[k].astype(bool))
+        ledger.norms.append(norms[k].astype(np.float32))
+    for k, v in dev_evals:
+        ledger.acc_rounds.append(int(k))
+        ledger.acc.append(float(v))
+    ledger.wall_s = t_end - t_start
+    steady = rounds - first_units
+    if t_first is not None and steady > 0 and t_end > t_first:
+        ledger.rounds_per_sec = steady / (t_end - t_first)
+    else:
+        ledger.rounds_per_sec = rounds / max(t_end - t_start, 1e-9)
+    if artifact:
+        ledger.write(artifact)
+    return params, ledger
+
+
+def run_scenario(
+    scenario,
+    *,
+    reduced: bool = False,
+    mode: str = "prefetch",
+    rounds: int | None = None,
+    rounds_per_scan: int = 8,
+    seed: int | None = None,
+    artifact: str | None = None,
+) -> tuple:
+    """Run a registered scenario (by name or instance) end to end.
+
+    Builds the scenario's dataset and model (``reduced=True`` shrinks both —
+    the scenario-grid smoke path), then delegates to :func:`run_simulation`.
+    Returns ``(params, SimLedger)``.
+    """
+    sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if reduced:
+        sc = sc.reduced()
+    ds = sc.build_dataset(reduced=reduced)
+    init_fn, loss_fn, _ = sc.build_model(ds)
+    return run_simulation(
+        ds, init_fn, loss_fn, sc.fl, rounds if rounds is not None else sc.rounds,
+        batch_size=sc.batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
+        seed=sc.seed if seed is None else seed,
+        scenario_name=sc.name, artifact=artifact,
+    )

@@ -1,0 +1,150 @@
+"""Device-resident client pool: pad once, gather cohorts on device.
+
+The legacy host loop rebuilt every round's cohort batch with numpy fancy
+indexing and re-uploaded it — O(cohort · batch bytes) of host work and
+host→device traffic per round, fully serialized with the jitted round step.
+The :class:`ClientPool` inverts that: the whole ``FederatedDataset`` is
+padded/stacked ONCE into device-resident ``(pool, max_examples, ...)``
+buffers, and a round cohort becomes two tiny index arrays (client ids +
+per-client example rows) that a jitted gather turns into the
+``(n, R, b, ...)`` round batch entirely on device.
+
+The driver (repro/sim/driver.py) runs that gather as a **double-buffered
+host→device prefetch pipeline**: while round k's jitted step is still
+executing, round k+1's plan is drawn on the host and its gather is already
+dispatched — the host never sits between two device computations.  For fully
+device-resident pools the driver can go further and `lax.scan` over whole
+blocks of rounds (the plans for the block are stacked and the gather happens
+inside the scan body), removing the per-round dispatch entirely.
+
+Cohort *plans* (:func:`plan_cohort`) consume the host RNG in exactly the
+order ``FederatedDataset.sample_round_batches`` does — one
+``rng.permutation(n_i)`` per cohort client, in cohort order — so the batches
+a pool gather produces are bitwise identical to the legacy host-built ones,
+which is what keeps the driver's sampling masks bitwise identical to the
+legacy trainer loop (gated by tests/test_sim.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RoundPlan(NamedTuple):
+    """One round's cohort, as host index arrays (the only per-round host work).
+
+    ``clients``: (n,) pool rows; ``take``: (n, R, b) per-client example rows;
+    ``step_mask``: (n, R) local-epoch step mask (see
+    ``FederatedDataset.sample_round_batches``).
+    """
+
+    clients: np.ndarray
+    take: np.ndarray
+    step_mask: np.ndarray
+
+
+def plan_cohort(rng, sizes, clients, max_steps, batch_size, local_epoch=True):
+    """Draw one round's example indices, RNG-compatible with the host path.
+
+    Consumes ``rng`` exactly like ``FederatedDataset.sample_round_batches``
+    (one ``rng.permutation(n_i)`` per client, in cohort order) and computes
+    the same cyclic ``np.resize`` fill and local-epoch step mask — so a pool
+    gather of this plan is bitwise identical to the legacy host-built batch.
+    """
+    clients = np.asarray(clients)
+    take = np.empty((len(clients), max_steps, batch_size), np.int32)
+    step_mask = np.empty((len(clients), max_steps), np.float32)
+    for i, ci in enumerate(clients):
+        n = int(sizes[int(ci)])
+        steps_i = (
+            max(1, min(max_steps, -(-n // batch_size))) if local_epoch else max_steps
+        )
+        perm = rng.permutation(n)
+        take[i] = np.resize(perm, (max_steps, batch_size))
+        step_mask[i] = (np.arange(max_steps) < steps_i).astype(np.float32)
+    return RoundPlan(clients.astype(np.int32), take, step_mask)
+
+
+def gather_batch(buffers, clients, take, step_mask):
+    """Pure (traceable) cohort gather: pool buffers -> ``(n, R, b, ...)`` batch.
+
+    Used both by the jitted :meth:`ClientPool.gather` and *inside* the
+    driver's scan-over-rounds body, where ``clients``/``take``/``step_mask``
+    are one round's slice of the stacked block plans.
+    """
+
+    def one(buf):
+        # one fused gather: (n, R, b) example rows straight out of the
+        # (pool, max_examples, ...) buffer — no (n, max_examples, ...)
+        # per-cohort intermediate is ever materialised.
+        return buf[clients[:, None, None], take]
+
+    batch = {k: one(v) for k, v in buffers.items()}
+    batch["_step_mask"] = step_mask
+    return batch
+
+
+@jax.jit
+def _gather_jit(buffers, clients, take, step_mask):
+    return gather_batch(buffers, clients, take, step_mask)
+
+
+class ClientPool:
+    """Device-resident padded copy of a ``FederatedDataset``.
+
+    Every data key is stacked into one ``(pool, max_examples, ...)`` buffer
+    (clients padded with zeros up to the largest client; real rows are always
+    addressed through a :class:`RoundPlan`, so padding is never read).  Built
+    once per simulation; all subsequent per-round work is index generation on
+    the host and a jitted gather on device.
+    """
+
+    def __init__(self, dataset):
+        self.n_clients = dataset.n_clients
+        self.sizes = np.asarray(dataset.sizes())
+        self.max_examples = int(self.sizes.max())
+        buffers = {}
+        for k, first in dataset.client_data[0].items():
+            buf = np.zeros(
+                (self.n_clients, self.max_examples) + first.shape[1:], first.dtype
+            )
+            for i, d in enumerate(dataset.client_data):
+                buf[i, : len(d[k])] = d[k]
+            buffers[k] = jnp.asarray(buf)
+        self.buffers = buffers
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by the padded pool buffers."""
+        return sum(int(b.size * b.dtype.itemsize) for b in self.buffers.values())
+
+    def plan(self, rng, clients, max_steps, batch_size, local_epoch=True):
+        """:func:`plan_cohort` bound to this pool's client sizes."""
+        return plan_cohort(rng, self.sizes, clients, max_steps, batch_size, local_epoch)
+
+    def gather(self, plan: RoundPlan):
+        """Dispatch the (async, jitted) device gather of one round's batch."""
+        return _gather_jit(
+            self.buffers,
+            jnp.asarray(plan.clients),
+            jnp.asarray(plan.take),
+            jnp.asarray(plan.step_mask),
+        )
+
+
+def stack_plans(plans):
+    """Stack per-round plans into block arrays for the scan-over-rounds path.
+
+    Returns ``(clients (S,n), take (S,n,R,b), step_mask (S,n,R))`` — the xs a
+    ``lax.scan`` over ``S`` rounds consumes, gathering each round's batch from
+    the device-resident pool inside the scan body.
+    """
+    return (
+        np.stack([p.clients for p in plans]),
+        np.stack([p.take for p in plans]),
+        np.stack([p.step_mask for p in plans]),
+    )

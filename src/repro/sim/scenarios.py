@@ -1,0 +1,216 @@
+"""Scenario registry: the paper's Sec. 4 experiment grid as named configs.
+
+The paper evaluates its samplers through a grid of multi-round simulations —
+algorithm (FedAvg Sec. 4.2 / DSGD Sec. 4.1) × sampler (optimal / aocs /
+uniform / full) × dataset (FEMNIST datasets 1-3, Shakespeare, balanced
+CIFAR) × partial availability (Appendix E) × compression (Sec. 6 future
+work) × round-engine combo.  Each cell of that experiment grid is one named,
+parameterized :class:`Scenario` here; ``SCENARIOS`` is the registry the sim
+driver, ``launch/train.py --scenario`` and the scenario-grid smoke test all
+read (every registered scenario must run end-to-end on the reduced synthetic
+datasets — gated by tests/test_sim.py::test_scenario_grid_smoke).
+
+A scenario owns everything needed to reproduce its cell: the dataset
+factory, the model, the :class:`FLConfig` and the run lengths; ``reduced()``
+shrinks it to a seconds-scale CPU smoke variant (same grid cell, tiny pool).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+from repro.configs.base import FLConfig
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One cell of the paper's experiment grid, fully parameterized.
+
+    ``dataset`` names a synthetic factory (``femnist1|femnist2|femnist3``,
+    ``charlm``, ``cifar``); ``dataset_kw`` overrides its defaults; ``paper``
+    records the section/figure the cell reproduces.
+    """
+
+    name: str
+    dataset: str
+    fl: FLConfig
+    rounds: int = 50
+    batch_size: int = 20
+    hidden: int = 64
+    seed: int = 1
+    paper: str = ""
+    dataset_kw: dict = field(default_factory=dict)
+
+    def with_(self, **kw) -> "Scenario":
+        """``dataclasses.replace`` shorthand (mirrors ModelConfig.with_)."""
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "Scenario":
+        """Seconds-scale CPU smoke variant of the same grid cell.
+
+        Shrinks the pool/cohort/model but keeps every axis value (algorithm,
+        sampler, availability, compression, engine) so the smoke test still
+        exercises the cell's actual code path.
+        """
+        fl = dataclasses.replace(
+            self.fl,
+            n_clients=8,
+            expected_clients=min(self.fl.expected_clients, 3),
+            local_steps=min(self.fl.local_steps, 2),
+            scan_group=2,
+            cache_groups=min(self.fl.cache_groups, 2),
+        )
+        return self.with_(
+            name=self.name + "-reduced", fl=fl, rounds=2, batch_size=4, hidden=16
+        )
+
+    def build_dataset(self, reduced: bool = False):
+        """Instantiate the scenario's (optionally reduced) synthetic dataset."""
+        from repro.data import charlm, cifar_like, femnist_like
+
+        kw = dict(self.dataset_kw)
+        if self.dataset.startswith("femnist"):
+            did = int(self.dataset[len("femnist"):])
+            if reduced:
+                kw.setdefault("n_clients", 24)
+                kw.setdefault("dim", 48)
+                kw.setdefault("num_classes", 10)
+                kw.setdefault("base_examples", 24)
+            else:
+                kw.setdefault("n_clients", 96)
+            return femnist_like(dataset_id=did, seed=0, **kw)
+        if self.dataset == "charlm":
+            if reduced:
+                kw.setdefault("n_clients", 24)
+                kw.setdefault("chars_per_client", 120)
+            else:
+                kw.setdefault("n_clients", 240)
+            return charlm(seed=3, **kw)
+        if self.dataset == "cifar":
+            if reduced:
+                kw.setdefault("n_clients", 24)
+                kw.setdefault("num_classes", 10)
+                kw.setdefault("dim", 32)
+                kw.setdefault("per_client", 16)
+            else:
+                kw.setdefault("n_clients", 64)
+            return cifar_like(**kw)
+        raise ValueError(f"scenario {self.name!r}: unknown dataset {self.dataset!r}")
+
+    def build_model(self, dataset):
+        """Returns ``(init_fn, loss_fn, accuracy_fn)`` for the scenario's model.
+
+        Sized by ``self.hidden`` alone — ``reduced()`` already shrinks it.
+        """
+        from repro.models.simple import gru_lm, mlp_classifier
+
+        if self.dataset == "charlm":
+            return gru_lm(dataset.num_classes, hidden=self.hidden, layers=2)
+        return mlp_classifier(dataset.input_dim, dataset.num_classes, hidden=self.hidden)
+
+
+SCENARIOS: dict = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    """Add a scenario to the registry (unique names enforced)."""
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    """Look up a registered scenario; the error names every known scenario."""
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {', '.join(list_scenarios())}"
+        ) from None
+
+
+def list_scenarios() -> list:
+    """Sorted names of every registered scenario."""
+    return sorted(SCENARIOS)
+
+
+def _fl(**kw) -> FLConfig:
+    base = dict(n_clients=32, expected_clients=3, sampler="aocs", local_steps=8,
+                lr_local=0.125)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _build_grid():
+    # FedAvg on FEMNIST datasets 1-3 (Sec. 4.2, Figs. 3-5): OCS vs the two
+    # baselines; uniform needs the paper's smaller step size.
+    for did in (1, 2, 3):
+        for sampler, m, lr in (
+            ("full", 32, 0.125), ("aocs", 3, 0.125), ("uniform", 3, 0.03125),
+        ):
+            register(Scenario(
+                name=f"femnist{did}-fedavg-{sampler}",
+                dataset=f"femnist{did}",
+                fl=_fl(sampler=sampler, expected_clients=m, lr_local=lr),
+                paper=f"Sec. 4.2 Figs. 3-5 (FEMNIST dataset {did}, {sampler})",
+            ))
+    # DSGD (Sec. 4.1): exact Eq. 7 probabilities vs uniform, R=1 local step.
+    for sampler, lr in (("optimal", 0.0625), ("uniform", 0.03125)):
+        register(Scenario(
+            name=f"femnist1-dsgd-{sampler}",
+            dataset="femnist1",
+            fl=_fl(algorithm="dsgd", sampler=sampler, local_steps=1,
+                   lr_local=lr, lr_global=0.5),
+            paper=f"Sec. 4.1 (DSGD, {sampler})",
+        ))
+    # Shakespeare-like char LM (Sec. 4.2, Figs. 6-7).
+    for sampler, lr in (("aocs", 1.0), ("uniform", 0.5)):
+        register(Scenario(
+            name=f"charlm-fedavg-{sampler}",
+            dataset="charlm",
+            fl=_fl(sampler=sampler, expected_clients=2, local_steps=6, lr_local=lr),
+            batch_size=8,
+            paper=f"Sec. 4.2 Figs. 6-7 (Shakespeare, {sampler})",
+        ))
+    # Balanced CIFAR-like pool (Appendix G): homogeneous sizes shrink the
+    # OCS advantage — the grid's control cell.
+    register(Scenario(
+        name="cifar-fedavg-aocs",
+        dataset="cifar",
+        fl=_fl(local_steps=5, lr_local=0.0625),
+        paper="Appendix G (balanced pool control)",
+    ))
+    # Partial availability (Appendix E): clients online w.p. q.
+    register(Scenario(
+        name="femnist1-fedavg-aocs-q0.7",
+        dataset="femnist1",
+        fl=_fl(availability=0.7),
+        paper="Appendix E (partial availability, q=0.7)",
+    ))
+    # OCS composed with unbiased compression (Sec. 6 future work).
+    register(Scenario(
+        name="femnist1-fedavg-aocs-randk",
+        dataset="femnist1",
+        fl=_fl(compression="randk", compression_param=0.1),
+        paper="Sec. 6 future work (rand-k x OCS)",
+    ))
+    # Round-engine axes on the same cell: the single-pass scan engine and
+    # the fused pallas aggregation backend (beyond-paper execution policies;
+    # masks stay bitwise identical to vmap+jnp — docs/architecture.md).
+    register(Scenario(
+        name="femnist1-fedavg-aocs-scan",
+        dataset="femnist1",
+        fl=_fl(round_engine="scan", scan_group=4, cache_groups=4),
+        paper="Sec. 4.2 grid cell on the single-pass scan engine",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-pallas",
+        dataset="femnist1",
+        fl=_fl(agg_backend="pallas"),
+        paper="Sec. 4.2 grid cell on the fused pallas aggregate",
+    ))
+
+
+_build_grid()

@@ -39,7 +39,7 @@ def test_ocs_close_to_full_and_beats_uniform(femnist):
     h_full = _run(ds, ev, "full", 0.125)
     h_ocs = _run(ds, ev, "aocs", 0.125)
     h_uni = _run(ds, ev, "uniform", 0.03125)  # paper: uniform needs smaller lr
-    acc_full, acc_ocs, acc_uni = (h.acc[-1][1] for h in (h_full, h_ocs, h_uni))
+    acc_full, acc_ocs, acc_uni = (h.acc[-1] for h in (h_full, h_ocs, h_uni))
     assert acc_ocs >= acc_uni + 0.05
     assert acc_ocs >= acc_full - 0.10
     # and in uplink bits, OCS is far cheaper than full for the same rounds

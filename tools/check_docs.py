@@ -49,6 +49,13 @@ DOCSTRING_CONTRACT = [
     ("src/repro/fl/engine.py", "RoundEngine", ["Eq. 7", "Eq. 2"]),
     ("src/repro/fl/shard_round.py", None, ["all_gather", "psum"]),
     ("src/repro/core/bits.py", None, ["Remark 3", "footnote 5"]),
+    ("src/repro/sim/pool.py", None, ["double-buffered", "prefetch", "bitwise"]),
+    ("src/repro/sim/pool.py", "ClientPool", ["evice-resident"]),
+    ("src/repro/sim/pool.py", "plan_cohort", ["sample_round_batches"]),
+    ("src/repro/sim/scenarios.py", None, ["Sec. 4", "experiment grid"]),
+    ("src/repro/sim/driver.py", None, ["ledger", "schema", "uplink and downlink"]),
+    ("src/repro/sim/driver.py", "run_simulation", ["bitwise", "mask"]),
+    ("src/repro/sim/driver.py", "validate_ledger", ["schema-1"]),
 ]
 
 # modules whose every public top-level def/class must carry a docstring
@@ -63,6 +70,9 @@ FULL_COVERAGE_MODULES = [
     "src/repro/kernels/update_cache.py",
     "src/repro/fl/engine.py",
     "src/repro/fl/shard_round.py",
+    "src/repro/sim/pool.py",
+    "src/repro/sim/scenarios.py",
+    "src/repro/sim/driver.py",
 ]
 
 ARCHITECTURE_MUSTS = [
@@ -70,6 +80,16 @@ ARCHITECTURE_MUSTS = [
     # the scan-engine dataflow section (two-pass vs single-pass + memory
     # formulas) must survive future edits
     "Scan engine dataflow", "cache_groups·scan_group·d", "## Limits",
+    # the simulation-subsystem section: pool / prefetch / scan-over-rounds
+    # dataflow, the ledger contract and the mode-parity guarantee
+    "Simulation subsystem", "scan-over-rounds", "round_bits_duplex",
+    "validate_ledger", "bitwise-identical per-round participation masks",
+]
+# docs/paper_map.md must keep the Sec. 4 experiment-grid rows that bind the
+# paper's evaluation setup to the sim subsystem.
+PAPER_MAP_MUSTS = [
+    "src/repro/sim/scenarios.py", "src/repro/sim/driver.py",
+    "Sec. 4 — experiment grid", "Sec. 4 — multi-round evaluation loop",
 ]
 # docs/benchmarks.md: the run recipe, the schema-3 field contract, and the
 # default-gating policy — enforced so the CI docs job catches drift between
@@ -77,6 +97,7 @@ ARCHITECTURE_MUSTS = [
 BENCHMARKS_MUSTS = [
     "bench_round_engine", "local_update_evals", "--smoke", "cache_groups",
     "us_per_round", "pallas_interpret", "round_engine.json",
+    "bench_sim", "sim.json", "rounds_per_sec",
 ]
 README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md"]
 
@@ -127,6 +148,10 @@ def check_paper_map(errors: list) -> None:
                     fail(errors, f"paper_map.md:{ln} references missing {rel}::{name}")
     if not n_refs:
         fail(errors, "docs/paper_map.md names no src/tests paths")
+    text = path.read_text()
+    for must in PAPER_MAP_MUSTS:
+        if must not in text:
+            fail(errors, f"paper_map.md no longer documents {must!r}")
 
 
 def check_docstrings(errors: list) -> None:
