@@ -16,14 +16,19 @@ On this CPU container the pallas backend runs in interpret mode, so its
 wall-clock is a correctness proxy only (the artifact records the mode); on a
 TPU the same harness times the compiled kernels.
 
-Artifact: benchmarks/artifacts/round_engine.json (schema 3 — see
+Since schema 4 the shard_map combos run the compression axis too
+(``shard+<be>+randk``) — the mesh path compresses inside the shard body
+(fl/shard_round.py) with masks bitwise identical to the single-device
+engines, asserted per combo here.
+
+Artifact: benchmarks/artifacts/round_engine.json (schema 4 — see
 docs/benchmarks.md for the field contract and docs/architecture.md for how
-the numbers gate the FLConfig defaults; schema 2 lacked the cache combos and
-``local_update_evals``, schema 1 also lacked the ``schema`` field and the
-``shard+*`` combos).
+the numbers gate the FLConfig defaults; schema 3 lacked the compressed
+``shard+*`` combos, schema 2 the cache combos and ``local_update_evals``,
+schema 1 also the ``schema`` field and the ``shard+*`` combos).
 
 ``python -m benchmarks.bench_round_engine --smoke`` runs tiny shapes and
-asserts the schema-3 contract (the CI bench-smoke step).
+asserts the schema-4 contract (the CI bench-smoke step).
 """
 
 from __future__ import annotations
@@ -47,7 +52,7 @@ from repro.models.simple import mlp_classifier
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
-SCHEMA = 3
+SCHEMA = 4
 
 # keys every combo entry must carry (checked by smoke() / the CI bench step)
 COMBO_KEYS = {
@@ -109,6 +114,8 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
         },
         "combos": {},
     }
+    shard_ok = n % max(n_dev, 1) == 0
+    mesh = None  # built from the first shard combo's fl.client_axis
     for compression in ("none", "randk"):
         fl = FLConfig(
             n_clients=n, expected_clients=m, sampler="aocs",
@@ -116,6 +123,7 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
             compression=compression, compression_param=0.1,
         )
         weights = client_weights(fl)
+        sfx = "" if compression == "none" else f"+{compression}"
         masks = {}
         for mem, be, cg, base_tag in _combos(n, scan_group):
             engine = RoundEngine(loss, fl, memory=mem, backend=be,
@@ -123,7 +131,7 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
             step = jax.jit(engine.make_step())
             us, (_, _, metrics) = _time_step(step, params, batch, weights, key, reps)
             masks[base_tag] = np.asarray(metrics.mask)
-            tag = base_tag + ("" if compression == "none" else f"+{compression}")
+            tag = base_tag + sfx
             csv_line(
                 f"round_engine_{tag}", us,
                 f"sent={int(metrics.mask.sum())};loss={float(metrics.loss):.4f}"
@@ -143,52 +151,51 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
                     cg, scan_group, dim, n_groups=n // scan_group
                 )
             results["combos"][tag] = entry
-        # the matrix is only comparable if every combo made the same decisions
+        # shard_map round (explicit collectives) over every local device —
+        # since schema 4 the mesh path runs the compression axis too
+        # (compression happens inside the shard body, fl/shard_round.py).
+        if shard_ok:
+            from repro.fl.shard_round import make_shard_map_round
+
+            for be in ("jnp", "pallas"):
+                fl_be = FLConfig(
+                    n_clients=n, expected_clients=m, sampler="aocs",
+                    local_steps=local_steps, lr_local=0.125, agg_backend=be,
+                    compression=compression, compression_param=0.1,
+                )
+                if mesh is None:
+                    mesh = jax.make_mesh((n_dev,), (fl_be.client_axis,))
+                step = jax.jit(make_shard_map_round(loss, fl_be, mesh))
+                us, (_, _, metrics) = _time_step(step, params, batch, weights,
+                                                 key, reps)
+                masks[f"shard+{be}"] = np.asarray(metrics.mask)
+                tag = f"shard+{be}{sfx}"
+                csv_line(
+                    f"round_engine_{tag}", us,
+                    f"sent={int(metrics.mask.sum())};loss={float(metrics.loss):.4f}",
+                )
+                results["combos"][tag] = {
+                    "us_per_round": us,
+                    "memory": "shard",
+                    "backend": be,
+                    "compression": compression,
+                    "mesh_axis_size": n_dev,
+                    "sent_clients": int(metrics.mask.sum()),
+                    "local_update_evals": n,
+                }
+        # the matrix is only comparable if every combo made the same
+        # decisions — shard combos included (the mesh-compression gate).
         ref = masks["vmap+jnp"]
         assert all(np.array_equal(ref, v) for v in masks.values()), "mask divergence"
         # the acceptance gate of the single-pass engine: the cached path does
         # strictly fewer local_update evaluations than two-pass recompute
         # (n vs 2n when the cache covers every group).
         for be in ("jnp", "pallas"):
-            sfx = "" if compression == "none" else f"+{compression}"
             cached = results["combos"][f"scan+{be}{sfx}"]["local_update_evals"]
             twopass = results["combos"][f"scan+{be}+recompute{sfx}"]["local_update_evals"]
             assert cached == n and twopass == 2 * n and cached < twopass, (
                 cached, twopass,
             )
-
-    # shard_map round (explicit collectives) over every local device; the
-    # shard path has no compression axis, so it joins the 'none' matrix only.
-    if n % max(n_dev, 1) == 0:
-        from repro.fl.shard_round import make_shard_map_round
-
-        fl = FLConfig(
-            n_clients=n, expected_clients=m, sampler="aocs",
-            local_steps=local_steps, lr_local=0.125,
-        )
-        weights = client_weights(fl)
-        mesh = jax.make_mesh((n_dev,), (fl.client_axis,))
-        for be in ("jnp", "pallas"):
-            fl_be = FLConfig(
-                n_clients=n, expected_clients=m, sampler="aocs",
-                local_steps=local_steps, lr_local=0.125, agg_backend=be,
-            )
-            step = jax.jit(make_shard_map_round(loss, fl_be, mesh))
-            us, (_, _, metrics) = _time_step(step, params, batch, weights, key, reps)
-            tag = f"shard+{be}"
-            csv_line(
-                f"round_engine_{tag}", us,
-                f"sent={int(metrics.mask.sum())};loss={float(metrics.loss):.4f}",
-            )
-            results["combos"][tag] = {
-                "us_per_round": us,
-                "memory": "shard",
-                "backend": be,
-                "compression": "none",
-                "mesh_axis_size": n_dev,
-                "sent_clients": int(metrics.mask.sum()),
-                "local_update_evals": n,
-            }
 
     with open(os.path.join(ART, artifact), "w") as f:
         json.dump(results, f, indent=2)
@@ -196,13 +203,14 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
 
 
 def smoke():
-    """CI gate: tiny-shape run + schema-3 contract assertions.
+    """CI gate: tiny-shape run + schema-4 contract assertions.
 
     Keeps the benchmark from silently rotting — the artifact must carry the
     schema marker, the per-combo key set, the cache metadata on scan combos,
-    and the cached < recompute local_update_evals relation.  Writes to its
-    own (git-ignored) artifact so a local smoke run never clobbers the
-    committed round_engine.json CPU baseline.
+    the compressed shard combos (the mesh-compression gate), and the
+    cached < recompute local_update_evals relation.  Writes to its own
+    (git-ignored) artifact so a local smoke run never clobbers the committed
+    round_engine.json CPU baseline.
     """
     res = run(n=8, m=3, local_steps=2, batch_size=4, reps=1, scan_group=4,
               artifact="round_engine_smoke.json")
@@ -213,7 +221,8 @@ def smoke():
             "scan+jnp+recompute", "scan+pallas+recompute", "scan+jnp+randk"]
     if 8 % max(jax.device_count(), 1) == 0:
         # run() skips the shard section when n doesn't divide the devices
-        tags += ["shard+jnp", "shard+pallas"]
+        tags += ["shard+jnp", "shard+pallas", "shard+jnp+randk",
+                 "shard+pallas+randk"]
     for tag in tags:
         assert tag in res["combos"], tag
         assert COMBO_KEYS <= set(res["combos"][tag]), tag
@@ -221,7 +230,7 @@ def smoke():
         assert {"cache_groups", "cache_bytes"} <= set(res["combos"][f"scan+{be}"])
         assert (res["combos"][f"scan+{be}"]["local_update_evals"]
                 < res["combos"][f"scan+{be}+recompute"]["local_update_evals"])
-    print("round_engine bench smoke OK (schema 3)")
+    print("round_engine bench smoke OK (schema 4)")
 
 
 if __name__ == "__main__":

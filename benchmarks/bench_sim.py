@@ -11,16 +11,28 @@ throughput difference is pure execution policy:
 - ``scan``     — blocks of ``rounds_per_scan`` rounds inside one jitted
   ``lax.scan`` (no per-round dispatch at all).
 
+Since schema 2 the matrix also runs the mesh column: ``host+shard`` and
+``prefetch+shard`` execute the same scenario through the shard_map round
+(``fl.engine.make_engine(mesh=...)``) with the sharded ``ClientPool``
+(buffers NamedSharding-placed over the client axis, shard-local gathers) —
+masks must stay bitwise identical to the single-device host loop (asserted
+per run), so the shard entries measure pure placement/collective cost.
+Scan-over-rounds has no shard column (the shard_map step cannot run inside
+the scan block — docs/architecture.md#limits).
+
 ``rounds_per_sec`` is steady-state (the driver excludes the first
 round/block, which pays compilation).  The artifact gate: the prefetched and
 scan paths must be no slower than the host loop — the whole point of the
 subsystem (asserted in :func:`run`; the committed
-``benchmarks/artifacts/sim.json`` is the CPU baseline).
+``benchmarks/artifacts/sim.json`` is the CPU baseline).  The shard entries
+carry no timing gate: on an emulated CPU mesh their wall-clock is a
+correctness proxy, like the interpret-mode pallas combos.
 
-Artifact: ``benchmarks/artifacts/sim.json`` (schema 1, field contract in
-docs/architecture.md §Simulation subsystem).  ``--smoke`` runs the reduced
-scenario and asserts the artifact contract without timing gates (the CI
-``sim-smoke`` step).
+Artifact: ``benchmarks/artifacts/sim.json`` (schema 2, field contract in
+docs/benchmarks.md; schema 1 lacked the ``*+shard`` modes and
+``workload.mesh_axis_size``).  ``--smoke`` runs the reduced scenario and
+asserts the artifact contract without timing gates (the CI ``sim-smoke``
+step).
 """
 
 from __future__ import annotations
@@ -32,14 +44,24 @@ import sys
 import numpy as np
 
 from benchmarks.common import csv_line
-from repro.sim.driver import run_scenario, validate_ledger
+from repro.sim.driver import build_client_mesh, run_scenario, validate_ledger
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
-SCHEMA = 1
+SCHEMA = 2
 
 # keys every per-mode entry must carry (checked by smoke() / the CI sim-smoke step)
 MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s", "sent_total"}
+
+
+def _shard_mesh(scenario, reduced: bool):
+    """The shard column's client mesh for ``scenario``'s (reduced) config."""
+    from repro.sim.scenarios import get_scenario
+
+    sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    if reduced:
+        sc = sc.reduced()
+    return build_client_mesh(sc.fl)
 
 
 def run(
@@ -52,7 +74,8 @@ def run(
     artifact: str = "sim.json",
     assert_speed: bool = True,
 ):
-    """Time all three driver modes on ``scenario``; writes the schema-1 artifact.
+    """Time the three driver modes plus the two shard columns on
+    ``scenario``; writes the schema-2 artifact.
 
     Each mode runs ``reps`` times and records its best steady-state
     ``rounds_per_sec`` (per-run variance on a shared CPU is a few percent;
@@ -64,23 +87,30 @@ def run(
     os.makedirs(ART, exist_ok=True)
     results = {"schema": SCHEMA, "scenario": scenario, "workload": None, "modes": {}}
     ledgers = {}
-    for mode in ("host", "prefetch", "scan"):
+    # the single-device modes plus the mesh column (schema 2): host/prefetch
+    # re-run through the shard_map round on a client mesh over the local
+    # devices; scan has no shard column (docs/architecture.md#limits).
+    grid = [("host", None), ("prefetch", None), ("scan", None),
+            ("host", "shard"), ("prefetch", "shard")]
+    for mode, shard in grid:
+        tag = mode if shard is None else f"{mode}+shard"
+        mesh = None if shard is None else _shard_mesh(scenario, reduced)
         led = None
         for _ in range(max(reps, 1)):
             _, rep_led = run_scenario(
                 scenario, reduced=reduced, mode=mode, rounds=rounds,
-                rounds_per_scan=rounds_per_scan, seed=seed,
+                rounds_per_scan=rounds_per_scan, seed=seed, mesh=mesh,
             )
             if led is None or rep_led.rounds_per_sec > led.rounds_per_sec:
                 led = rep_led
         validate_ledger(led.to_json())
-        ledgers[mode] = led
+        ledgers[tag] = led
         if results["workload"] is None:
             results["workload"] = {**led.workload, "fl": led.fl,
                                    "reps": max(reps, 1),
                                    "reduced": bool(reduced)}
         entry = {
-            "mode": mode,
+            "mode": tag,
             "rounds_per_sec": led.rounds_per_sec,
             "us_per_round": 1e6 / led.rounds_per_sec,
             "wall_s": led.wall_s,
@@ -90,17 +120,20 @@ def run(
             entry["rounds_per_scan"] = rounds_per_scan
         if mode != "host":
             entry["pool_bytes"] = led.workload.get("pool_bytes")
-        results["modes"][mode] = entry
+        if shard is not None:
+            entry["mesh_axis_size"] = led.workload.get("mesh_axis_size")
+        results["modes"][tag] = entry
         csv_line(
-            f"sim_{mode}", entry["us_per_round"],
+            f"sim_{tag}", entry["us_per_round"],
             f"rps={led.rounds_per_sec:.1f};sent={entry['sent_total']}"
             f";loss={led.loss[-1]:.4f}",
         )
-    # the comparison is only meaningful if every mode made identical decisions
-    for mode in ("prefetch", "scan"):
+    # the comparison is only meaningful if every mode made identical
+    # decisions — the shard column included (the mesh-parity gate).
+    for tag in ("prefetch", "scan", "host+shard", "prefetch+shard"):
         for k in range(rounds):
-            assert np.array_equal(ledgers["host"].masks[k], ledgers[mode].masks[k]), (
-                mode, k, "mask divergence",
+            assert np.array_equal(ledgers["host"].masks[k], ledgers[tag].masks[k]), (
+                tag, k, "mask divergence",
             )
     if assert_speed:
         host_rps = results["modes"]["host"]["rounds_per_sec"]
@@ -116,26 +149,29 @@ def run(
 
 
 def smoke():
-    """CI gate: reduced-scenario run + schema-1 artifact contract assertions.
+    """CI gate: reduced-scenario run + schema-2 artifact contract assertions.
 
     Checks the artifact shape (schema marker, per-mode key set, the scan
-    block size, pool bytes on the pooled modes) and the cross-mode mask
-    parity that :func:`run` always enforces; timing gates are skipped at
-    smoke shapes.  Writes its own (git-ignored) artifact so a local smoke
-    never clobbers the committed sim.json CPU baseline.
+    block size, pool bytes on the pooled modes, the shard column's mesh axis
+    size) and the cross-mode mask parity that :func:`run` always enforces —
+    shard modes included; timing gates are skipped at smoke shapes.  Writes
+    its own (git-ignored) artifact so a local smoke never clobbers the
+    committed sim.json CPU baseline.
     """
     res = run(rounds=6, rounds_per_scan=3, reps=1, reduced=True,
               artifact="sim_smoke.json", assert_speed=False)
     assert res["schema"] == SCHEMA, res["schema"]
     assert {"rounds", "batch_size", "pool_clients", "model_dim", "fl",
             "backend_platform"} <= set(res["workload"])
-    for mode in ("host", "prefetch", "scan"):
+    for mode in ("host", "prefetch", "scan", "host+shard", "prefetch+shard"):
         assert mode in res["modes"], mode
         assert MODE_KEYS <= set(res["modes"][mode]), mode
         assert res["modes"][mode]["rounds_per_sec"] > 0, mode
     assert res["modes"]["scan"]["rounds_per_scan"] == 3
     assert res["modes"]["prefetch"]["pool_bytes"] > 0
-    print("sim bench smoke OK (schema 1)")
+    for mode in ("host+shard", "prefetch+shard"):
+        assert res["modes"][mode]["mesh_axis_size"] >= 1, mode
+    print("sim bench smoke OK (schema 2)")
 
 
 if __name__ == "__main__":

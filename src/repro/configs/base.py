@@ -210,8 +210,8 @@ class FLConfig:
     lr_global: float = 1.0         # eta_g (paper: 1.0)
     weights: str = "uniform"       # w_i scheme: uniform | data_size
     # beyond-paper (paper Sec. 6 future work): compress transmitted updates
-    compression: str = "none"      # none | randk | qsgd
-    compression_param: float = 0.1 # randk fraction / qsgd levels
+    compression: str = "none"      # none | randk | qsgd | natural
+    compression_param: float = 0.1 # randk fraction / qsgd levels (natural: unused)
     # paper Appendix E: per-client availability probability q (1.0 = always)
     availability: float = 1.0
     # round-engine execution policy (fl/engine.py) — orthogonal axes:

@@ -13,6 +13,9 @@ is actually sent — still one float per client).
 * ``qsgd``    — QSGD stochastic quantization (Alistarh et al. 2017) with s
   levels: transmit per-leaf norm + signs + integer levels
   (~ d * (log2(s+1) + 1) bits + one float).
+* ``natural`` — natural compression (Horváth et al. 2019): unbiased
+  stochastic rounding of each magnitude to one of its two neighbouring
+  powers of two, so only sign + exponent travel (9 bits per coordinate).
 """
 
 from __future__ import annotations
@@ -22,6 +25,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+# every compressor kind a config may name — the single tuple all config
+# validation (RoundEngine, shard_round) checks against, so a typo'd
+# fl.compression fails at engine construction, not at trace time.
+COMPRESSORS = ("none", "randk", "qsgd", "natural")
 
 
 def rand_k_leaf(x: jax.Array, frac: float, key: jax.Array) -> jax.Array:
@@ -43,6 +51,30 @@ def qsgd_leaf(x: jax.Array, levels: int, key: jax.Array) -> jax.Array:
     return out.reshape(x.shape).astype(x.dtype)
 
 
+def natural_leaf(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Unbiased rounding of each |x| to a neighbouring power of two.
+
+    With ``low = 2^floor(log2|x|)`` the value rounds up to ``2*low`` with
+    probability ``(|x| - low) / low`` and down to ``low`` otherwise, so
+    ``E[C(x)] = x`` coordinate-wise; only the sign and the 8-bit exponent
+    need to be transmitted.  Magnitudes below the smallest normal power
+    (``2^-126``) round stochastically between 0 and that power — never the
+    clamped (deterministically inflating) exponent an earlier version
+    emitted.  On backends that flush subnormals (XLA CPU), such inputs read
+    as 0 and compress to exact 0 — the scheme's floor, not a bias blow-up.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    mag = jnp.abs(flat)
+    tiny = jnp.float32(2.0 ** -126)
+    sub = mag < tiny
+    low = jnp.where(sub, 0.0, jnp.exp2(jnp.floor(jnp.log2(jnp.maximum(mag, tiny)))))
+    hi = jnp.where(sub, tiny, 2.0 * low)
+    prob = jnp.where(sub, mag / tiny, mag / jnp.maximum(low, tiny) - 1.0)
+    up = jax.random.uniform(key, flat.shape) < prob
+    out = jnp.sign(flat) * jnp.where(up, hi, low)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
 def compress_update(update: Any, key: jax.Array, kind: str, param: float) -> Any:
     """Apply an unbiased compressor leaf-wise to one client's update tree."""
     if kind in (None, "none"):
@@ -53,8 +85,10 @@ def compress_update(update: Any, key: jax.Array, kind: str, param: float) -> Any
         out = [rand_k_leaf(l, param, k) for l, k in zip(leaves, keys)]
     elif kind == "qsgd":
         out = [qsgd_leaf(l, int(param), k) for l, k in zip(leaves, keys)]
+    elif kind == "natural":
+        out = [natural_leaf(l, k) for l, k in zip(leaves, keys)]
     else:
-        raise ValueError(f"unknown compressor {kind!r}")
+        raise ValueError(f"unknown compressor {kind!r}; want one of {COMPRESSORS}")
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -68,4 +102,6 @@ def compressed_bits_per_update(dim: int, kind: str, param: float) -> int:
     if kind == "qsgd":
         s = int(param)
         return dim * (math.ceil(math.log2(s + 1)) + 1) + 32
+    if kind == "natural":
+        return dim * 9  # sign + 8-bit exponent per coordinate
     raise ValueError(kind)

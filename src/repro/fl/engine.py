@@ -78,6 +78,26 @@ class RoundMetrics(NamedTuple):
     mask: jax.Array
 
 
+def compress_client_updates(updates: Any, keys: jax.Array, fl: FLConfig) -> Any:
+    """Compress a block of client updates with per-client keys (no-op when
+    ``fl.compression == 'none'``).
+
+    THE one compression call every round path shares: ``updates`` leaves carry
+    a leading client axis, ``keys`` is the matching ``(block, 2)`` slice of
+    ``jax.random.split(k_comp, n_clients)``.  The single-device engines pass
+    each group's slice; the shard_map body passes its shard's slice of the
+    same key array — which is what makes compressed updates (hence norms,
+    hence masks) bitwise identical across every path.
+    """
+    if fl.compression == "none":
+        return updates
+    from repro.core.compression import compress_update
+
+    return jax.vmap(
+        lambda u, k: compress_update(u, k, fl.compression, fl.compression_param)
+    )(updates, keys)
+
+
 def make_local_update(loss_fn: Callable, fl: FLConfig):
     """loss_fn: (params, batch) -> (scalar, metrics dict)."""
 
@@ -134,11 +154,12 @@ def make_engine(loss_fn: Callable, fl: FLConfig, server_opt=None, *,
       per-shard fused kernel + one cross-shard psum).
 
     The shard path models the master update as plain ``lr_global`` SGD
-    (Alg. 3), so a stateful ``server_opt`` is only supported without a mesh;
-    likewise a compressing config is rejected there (clients would have to
-    compress before reporting norms).  Partial availability (Appendix E) IS
-    supported on every path — the shard body calls the same
-    ``ocs.sampling_plan``.
+    (Alg. 3), so a stateful ``server_opt`` is only supported without a mesh.
+    Unbiased compression and partial availability (Appendix E) ARE supported
+    on every path: the shard body compresses its local client block with the
+    same per-client subkeys the engines derive and calls the same
+    ``ocs.sampling_plan``, so masks stay bitwise identical across the mesh
+    boundary.
     """
     if mesh is None:
         return RoundEngine(loss_fn, fl, server_opt, interpret=interpret).make_step()
@@ -202,6 +223,12 @@ class RoundEngine:
             )
         if self.cache_groups < 0:
             raise ValueError(f"cache_groups must be >= 0, got {self.cache_groups}")
+        from repro.core.compression import COMPRESSORS
+
+        if fl.compression not in COMPRESSORS:
+            raise ValueError(
+                f"unknown compressor {fl.compression!r}; want one of {COMPRESSORS}"
+            )
         self._local_update = make_local_update(loss_fn, fl)
 
     @property
@@ -224,14 +251,7 @@ class RoundEngine:
 
     def _compress_group(self, updates, keys):
         """Compress a block of client updates with per-client keys (or no-op)."""
-        fl = self.fl
-        if fl.compression == "none":
-            return updates
-        from repro.core.compression import compress_update
-
-        return jax.vmap(
-            lambda u, k: compress_update(u, k, fl.compression, fl.compression_param)
-        )(updates, keys)
+        return compress_client_updates(updates, keys, self.fl)
 
     def _apply_server(self, params, opt_state, aggregate):
         if self.server_opt is None:

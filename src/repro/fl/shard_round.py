@@ -10,14 +10,23 @@ job):
 
   step                              collective (axis = clients)
   ------------------------------   ---------------------------
-  u_i = ||w_i U_i||                 none (local reduce)
+  C(U_i) = compress(U_i)            none (local, per-client subkey)
+  u_i = ||w_i C(U_i)||              none (local reduce)
   master aggregates norms (Alg. 2)  all_gather of one float / client
   p_i, mask_i                       local, deterministic given key
-  G = sum_i mask_i (w_i/p_i) U_i    psum over the client axis
+  G = sum_i mask_i (w_i/p_i) C(U_i) psum over the client axis
 
 Each mesh shard owns ``n_clients / axis_size`` clients; model dims stay
 un-sharded inside the shard_map body (suitable for the small/medium models
 the paper trains; the GSPMD path is the one that scales to the 777B configs).
+
+Unbiased compression (paper Sec. 1.2: "orthogonal and compatible" with OCS)
+runs INSIDE the shard body: each shard compresses its local client block
+with ``fl.engine.compress_client_updates`` before taking norms, using its
+slice of the same ``jax.random.split(k_comp, n)`` per-client subkeys the
+single-device engines derive — each client reports the norm of what it
+actually sends, and the compressed-update norms (hence the masks, hence the
+``round_bits`` bill) are bitwise identical to the vmap/scan engines.
 
 The final aggregate honours ``fl.agg_backend`` — the same jnp | pallas axis
 as :class:`repro.fl.engine.RoundEngine`:
@@ -44,7 +53,35 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import FLConfig
 from repro.core import ocs
 from repro.fl.round import RoundMetrics, make_local_update
+from repro.fl.engine import compress_client_updates
 from repro.kernels import ops as kops
+
+
+def validate_shard_config(fl: FLConfig, axis_size: int) -> None:
+    """Reject an unsupported config BEFORE anything touches a PRNG key.
+
+    All shard_map-round validation lives here and runs at factory time —
+    an earlier version interleaved checks with the round body, so a caller's
+    key-handling discipline could consume round keys on a config that was
+    about to be rejected.  Raises ``ValueError``; touching ``jax.random`` is
+    a bug (gated by tests/test_shard_round.py).
+    """
+    from repro.core.compression import COMPRESSORS
+
+    if fl.agg_backend not in ocs.AGG_BACKENDS:
+        raise ValueError(
+            f"unknown aggregation backend {fl.agg_backend!r}; "
+            f"want one of {ocs.AGG_BACKENDS}"
+        )
+    if fl.compression not in COMPRESSORS:
+        raise ValueError(
+            f"unknown compressor {fl.compression!r}; want one of {COMPRESSORS}"
+        )
+    if fl.n_clients % axis_size:
+        raise ValueError(
+            f"n_clients={fl.n_clients} must divide by the client-axis size "
+            f"{axis_size} (each shard owns n_clients/axis_size clients)"
+        )
 
 
 def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = None,
@@ -59,62 +96,53 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
     The sampling math itself is NOT re-implemented here: the body gathers the
     scalar norms and weights and calls ``ocs.sampling_plan`` — the same single
     copy of probabilities/mask/scale (incl. Appendix E availability) every
-    single-device path uses, which is what keeps masks bitwise identical
-    across the mesh boundary.  Unbiased compression is a single-device-engine
-    feature today (clients would have to compress before reporting norms), so
-    a compressing config is rejected rather than silently ignored.
+    single-device path uses.  Compression likewise reuses the engines'
+    ``compress_client_updates`` on the shard's local block with the identical
+    per-client subkey slice, which is what keeps masks bitwise identical
+    across the mesh boundary.  The config is validated up front
+    (:func:`validate_shard_config`) so a rejected config never consumes any
+    PRNG key.
     """
     if client_axis is None:
         client_axis = fl.client_axis
-    if fl.compression != "none":
-        raise ValueError(
-            f"fl.compression={fl.compression!r} is not supported on the "
-            "shard_map path yet (clients would have to compress before "
-            "reporting norms).  Either run the round without a mesh — "
-            "fl.engine.make_engine(..., mesh=None) selects the single-device "
-            "RoundEngine, where every fl.round_engine x fl.agg_backend combo "
-            "supports compression — or unset fl.compression "
-            "(compression='none') to keep the mesh.  See "
-            "docs/architecture.md#limits."
-        )
-    local_update = make_local_update(loss_fn, fl)
     axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
-    assert fl.n_clients % axis_size == 0, (fl.n_clients, axis_size)
+    validate_shard_config(fl, axis_size)
+    local_update = make_local_update(loss_fn, fl)
 
     def body(params, batch, weights, key):
         # params/key replicated; batch/weights sharded on the client axis.
         updates, losses = jax.vmap(local_update, in_axes=(None, 0))(params, batch)
 
-        # local client norms (one float per owned client)
-        sq = jax.tree_util.tree_reduce(
-            lambda acc, leaf: acc
-            + jnp.sum(
-                jnp.square(leaf.astype(jnp.float32)),
-                axis=tuple(range(1, leaf.ndim)),
-            ),
-            updates,
-            jnp.zeros((weights.shape[0],), jnp.float32),
-        )
-        u_local = weights.astype(jnp.float32) * jnp.sqrt(sq)
+        # same key discipline as RoundEngine (k_sample, k_comp = split(key)),
+        # so the same round key draws bitwise-identical compression noise and
+        # participation masks here and on the single-device paths — the
+        # property the cross-path parity tests gate on.
+        k_sample, k_comp = jax.random.split(key)
+        idx = jax.lax.axis_index(client_axis)
+        k = weights.shape[0]
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, idx * k, k)
+
+        # paper Sec. 1.2 / Sec. 6: each client compresses BEFORE reporting
+        # its norm (it reports the norm of what it actually sends).  The key
+        # array is the engines' exact per-client split; each shard uses only
+        # its own slice.
+        if fl.compression != "none":
+            comp_keys = jax.random.split(k_comp, fl.n_clients)
+            updates = compress_client_updates(updates, sl(comp_keys), fl)
+
+        # local client norms (one float per owned client) — the same
+        # ocs.client_norms reduction, in the same leaf order, as the engines.
+        u_local = ocs.client_norms(updates, weights)
 
         # Algorithm 2's aggregation: the master only ever sees sums/gathers of
         # scalars — here an all_gather of one float per client (norms and
         # weights), after which every shard runs the replicated sampling plan.
         u_all = jax.lax.all_gather(u_local, client_axis, tiled=True)     # (n,)
         w_all = jax.lax.all_gather(weights, client_axis, tiled=True)     # (n,)
-        # same key discipline as RoundEngine (k_sample = first half of the
-        # round-key split into sampling_plan), so the same round key draws
-        # bitwise-identical masks here and on the single-device paths — the
-        # property the cross-path parity tests gate on.
-        k_sample, _ = jax.random.split(key)
         plan = ocs.sampling_plan(
             u_all, w_all, fl.expected_clients, k_sample,
             sampler=fl.sampler, j_max=fl.j_max, availability=fl.availability,
         )
-
-        idx = jax.lax.axis_index(client_axis)
-        k = weights.shape[0]
-        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, idx * k, k)
         scale = sl(plan.scale)
 
         # client -> master (Eq. 2): the cross-shard sum of scaled updates.

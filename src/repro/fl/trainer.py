@@ -65,8 +65,9 @@ def run_training(
 
     ``mode`` selects the simulation driver's execution path ('host' |
     'prefetch' | 'scan'); ``rounds_per_scan`` sizes the 'scan' blocks.  All
-    modes produce identical masks and allclose parameters for the same seed;
-    'scan' evaluates once per block instead of on the ``eval_every`` grid.
+    modes produce identical masks and allclose parameters for the same seed,
+    and all three evaluate on the same ``eval_every`` grid ('scan' aligns its
+    block boundaries to it).
     """
     from repro.sim.driver import run_simulation
 

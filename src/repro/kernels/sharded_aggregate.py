@@ -11,6 +11,11 @@ scalars up, then ONE partial sum per shard) maps onto exactly two steps:
 Nothing ever materialises the replicated ``(n, D)`` matrix that the
 single-device path's ``ops.tree_masked_aggregate`` concatenates — the only
 client-major buffer is the shard-local block that already lives on the shard.
+The kernel is agnostic to what the rows hold: the shard_map round feeds it
+raw updates or their compressed form ``C(U_i)`` (fl.compression, applied
+upstream in the shard body) identically — Eq. 2's contraction is the same
+either way, which is what keeps OCS "orthogonal and compatible" with
+compression on the mesh path.
 
 Kernel schedule
 ---------------

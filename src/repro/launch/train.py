@@ -11,8 +11,11 @@ one cross-shard psum (kernels/sharded_aggregate.py).
 ``--scenario NAME`` instead runs one cell of the paper's experiment grid
 (repro/sim/scenarios.py) through ``repro.sim.driver``: ``--prefetch``
 selects the double-buffered device-pool pipeline vs the legacy host loop,
-``--sim-rounds-per-scan N`` (N > 0) the scan-over-rounds fast path.  The
-ledger artifact lands under benchmarks/artifacts/sim/.
+``--sim-rounds-per-scan N`` (N > 0) the scan-over-rounds fast path, and
+``--shard on`` runs the cell on a client mesh (shard_map round + sharded
+``ClientPool``; ``Scenario.sharded`` cells build that mesh automatically —
+scan-over-rounds and a mesh are mutually exclusive).  The ledger artifact
+lands under benchmarks/artifacts/sim/.
 
 Examples (CPU container — reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
@@ -61,30 +64,48 @@ def synthetic_token_batch(rng, cfg, n, r, b, s):
 
 def run_scenario_cli(args):
     """The ``--scenario`` branch: one experiment-grid cell via repro.sim."""
-    from repro.sim.driver import run_scenario
+    from repro.sim.driver import build_client_mesh, run_scenario
     from repro.sim.scenarios import get_scenario, list_scenarios
 
     if args.scenario == "list":
         for name in list_scenarios():
             sc = get_scenario(name)
-            print(f"{name:40s} {sc.paper}")
+            shard = " [sharded]" if sc.sharded else ""
+            print(f"{name:40s} {sc.paper}{shard}")
         return
     if args.sim_rounds_per_scan > 0:
         mode = "scan"
     else:
         mode = "prefetch" if args.prefetch == "on" else "host"
     sc = get_scenario(args.scenario)
+    if args.shard == "off":
+        # an explicit off overrides even a Scenario.sharded cell (the only
+        # way to run a mesh cell's config single-device / in scan mode)
+        sc = sc.with_(sharded=False)
     effective = sc.reduced() if args.reduced else sc
+    mesh = None
+    if args.shard == "on" or effective.sharded:
+        if mode == "scan":
+            raise SystemExit(
+                "--sim-rounds-per-scan and a mesh conflict: the shard_map "
+                "round cannot run inside the scan-over-rounds block "
+                "(docs/architecture.md#limits) — drop --sim-rounds-per-scan "
+                "or pass --shard off"
+            )
+        mesh = build_client_mesh(effective.fl)
     # the artifact path carries the effective (possibly -reduced) name, so a
     # reduced smoke never clobbers a full run's ledger
     artifact = os.path.join(
         "benchmarks", "artifacts", "sim", f"{effective.name}-{mode}.json"
     )
-    print(f"[sim] scenario {effective.name} ({sc.paper}) mode={mode} "
+    shards = 0 if mesh is None else mesh.devices.shape[0]
+    print(f"[sim] scenario {effective.name} ({sc.paper}) mode={mode}"
+          f"{f' mesh={shards}' if shards else ''} "
           f"rounds={args.rounds if args.rounds is not None else effective.rounds}")
     _, ledger = run_scenario(
-        sc.name, reduced=args.reduced, mode=mode, rounds=args.rounds,
-        rounds_per_scan=max(args.sim_rounds_per_scan, 1), artifact=artifact,
+        sc, reduced=args.reduced, mode=mode, rounds=args.rounds,
+        rounds_per_scan=max(args.sim_rounds_per_scan, 1), mesh=mesh,
+        artifact=artifact,
     )
     for k, (loss, sent) in enumerate(zip(ledger.loss, ledger.sent)):
         print(f"[round {k:3d}] loss {loss:.4f} alpha {ledger.alpha[k]:.3f} "

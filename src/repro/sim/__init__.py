@@ -14,6 +14,7 @@ on top of the single-round ``RoundEngine`` stack:
 from repro.sim.driver import (  # noqa: F401
     SIM_SCHEMA,
     SimLedger,
+    build_client_mesh,
     run_scenario,
     run_simulation,
     validate_ledger,

@@ -13,7 +13,19 @@ modes over the same round semantics:
 * ``'scan'``     — scan-over-rounds fast path for fully device-resident
   pools: blocks of ``rounds_per_scan`` rounds run inside one jitted
   ``lax.scan`` (cohort gather in the scan body), removing per-round dispatch
-  entirely.  Eval (when requested) runs once per block, at its last round.
+  entirely.  Eval (when requested) keeps the ``eval_every`` grid: block
+  boundaries are aligned so every eval round ends a block, and the ledger's
+  ``acc_rounds`` are identical across all three modes (regression-gated in
+  tests/test_sim.py — an earlier version evaluated once per block only).
+
+A ``mesh`` argument switches ``'host'`` and ``'prefetch'`` onto the
+explicit-collective shard_map round (``fl.engine.make_engine(mesh=...)``):
+the prefetch pool goes sharded (``ClientPool(dataset, mesh=...)`` — buffers
+``NamedSharding``-placed over ``FLConfig.client_axis``, shard-local cohort
+gathers), and the round step shards clients over the same axis, compression
+and availability included.  ``'scan'`` mode is single-device only (the
+shard_map step inside ``lax.scan`` is not supported — rejected with an
+error, see docs/architecture.md#limits).
 
 All three modes consume the host RNG and the JAX round keys in exactly the
 legacy trainer's order, so for a fixed seed every mode — and the legacy loop
@@ -41,10 +53,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fl.engine import RoundEngine
+from repro.fl.engine import RoundEngine, make_engine
 from repro.fl.round import client_weights, round_bits_duplex
 from repro.sim.pool import ClientPool, gather_batch, stack_plans
 from repro.sim.scenarios import get_scenario
+
+
+def build_client_mesh(fl, devices: int | None = None):
+    """A 1-D client mesh over the largest feasible local device count.
+
+    The axis (named ``fl.client_axis``) spans the most devices that still
+    divide ``fl.n_clients`` — always at least 1, so a single-device container
+    exercises the same shard_map code path the production mesh runs.  Shared
+    by ``run_scenario`` (``Scenario.sharded`` cells), ``launch/train.py
+    --shard`` and ``benchmarks/bench_sim.py``.
+    """
+    n_dev = jax.device_count() if devices is None else devices
+    shards = max(d for d in range(1, n_dev + 1) if fl.n_clients % d == 0)
+    return jax.make_mesh((shards,), (fl.client_axis,))
 
 SIM_SCHEMA = 1
 MODES = ("host", "prefetch", "scan")
@@ -177,6 +203,7 @@ def run_simulation(
     seed: int = 0,
     local_epoch: bool = True,
     server_opt=None,
+    mesh=None,
     scenario_name: str | None = None,
     artifact: str | None = None,
 ) -> tuple:
@@ -187,9 +214,11 @@ def run_simulation(
     permutations and the per-round keys (``fold_in(key, 1000 + k)``) in the
     legacy trainer's exact order, so the per-round participation masks are
     **bitwise** identical across modes and to the legacy loop for the same
-    seed.  ``fl.weights == 'data_size'`` takes each cohort's slice of
-    ``dataset.sizes()`` (normalized per round) — the legacy loop silently
-    dropped it.  ``artifact`` (a path) serialises the ledger on completion.
+    seed — with or without a ``mesh`` (the shard_map round shares the
+    engines' sampling math and compression subkeys).  ``fl.weights ==
+    'data_size'`` takes each cohort's slice of ``dataset.sizes()``
+    (normalized per round) — the legacy loop silently dropped it.
+    ``artifact`` (a path) serialises the ledger on completion.
     """
     if mode not in MODES:
         raise ValueError(f"unknown sim mode {mode!r}; want one of {MODES}")
@@ -202,12 +231,28 @@ def run_simulation(
         )
     if mode == "scan" and rounds_per_scan < 1:
         raise ValueError(f"rounds_per_scan must be >= 1, got {rounds_per_scan}")
+    if mode == "scan" and mesh is not None:
+        raise ValueError(
+            "sim mode 'scan' does not support a mesh: the shard_map round "
+            "cannot run inside the scan-over-rounds block — use mode='host' "
+            "or mode='prefetch' with the mesh, or drop the mesh to keep "
+            "scan-over-rounds (docs/architecture.md#limits)"
+        )
+
+    # mesh-aware engine selection, BEFORE any RNG or device work: with a
+    # mesh, host/prefetch run the explicit-collective shard_map round; a
+    # rejected config (unknown compressor/backend, server_opt on the mesh)
+    # raises here — no key is consumed and no pool is uploaded.
+    if mesh is not None:
+        round_step_fn = make_engine(loss_fn, fl, server_opt, mesh=mesh)
+        step_factory = lambda: round_step_fn
+    else:
+        step_factory = RoundEngine(loss_fn, fl, server_opt).make_step
 
     rng = np.random.default_rng(seed)
     key = jax.random.PRNGKey(seed)
     params = init_fn(jax.random.fold_in(key, 1))
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
-    engine = RoundEngine(loss_fn, fl, server_opt)
     opt_state = server_opt.init(params) if server_opt is not None else ()
     sizes = np.asarray(dataset.sizes())
     uniform_w = client_weights(fl)
@@ -231,7 +276,7 @@ def run_simulation(
     t_start = time.time()
 
     if mode == "host":
-        round_step = jax.jit(engine.make_step(), donate_argnums=(0, 1))
+        round_step = jax.jit(step_factory(), donate_argnums=(0, 1))
         for k in range(rounds):
             clients = draw_cohort()
             w = cohort_weights(clients)
@@ -252,8 +297,8 @@ def run_simulation(
                 t_first, first_units = time.time(), 1
 
     elif mode == "prefetch":
-        cpool = ClientPool(dataset)
-        round_step = jax.jit(engine.make_step(), donate_argnums=(0, 1))
+        cpool = ClientPool(dataset, mesh=mesh, client_axis=fl.client_axis)
+        round_step = jax.jit(step_factory(), donate_argnums=(0, 1))
 
         def draw_round(k):
             clients = draw_cohort()
@@ -281,7 +326,7 @@ def run_simulation(
 
     else:  # scan-over-rounds
         cpool = ClientPool(dataset)
-        step_fn = engine.make_step()
+        step_fn = step_factory()
 
         def chunk_fn(buffers, params, opt_state, clients_s, take_s, smask_s,
                      w_s, keys_s):
@@ -301,6 +346,15 @@ def run_simulation(
         done = 0
         while done < rounds:
             span = min(rounds_per_scan, rounds - done)
+            if eval_fn is not None:
+                # keep the eval_every grid: the next eval round must END a
+                # block (eval happens after round k's step), so block spans
+                # shrink to land exactly on it — acc_rounds then match the
+                # host/prefetch modes round for round.
+                nxt = done
+                while not want_eval(nxt):
+                    nxt += 1
+                span = min(span, nxt - done + 1)
             plans, w_s, keys_s = [], [], []
             for k in range(done, done + span):
                 clients = draw_cohort()
@@ -317,8 +371,7 @@ def run_simulation(
             )
             dev_metrics.append(ms)
             done += span
-            if eval_fn is not None:
-                # scan granularity: one eval per block, at its last round
+            if want_eval(done - 1):
                 dev_evals.append((done - 1, eval_fn(params, eval_batch)))
             if t_first is None:
                 jax.block_until_ready(ms.loss)
@@ -347,6 +400,10 @@ def run_simulation(
             "backend_platform": jax.default_backend(),
             **({"rounds_per_scan": rounds_per_scan} if mode == "scan" else {}),
             **({"pool_bytes": cpool.nbytes} if mode != "host" else {}),
+            **(
+                {"mesh_axis_size": int(np.prod(mesh.devices.shape))}
+                if mesh is not None else {}
+            ),
         },
     )
     losses, alphas, gammas = rows("loss"), rows("alpha"), rows("gamma")
@@ -388,22 +445,34 @@ def run_scenario(
     rounds: int | None = None,
     rounds_per_scan: int = 8,
     seed: int | None = None,
+    mesh=None,
     artifact: str | None = None,
 ) -> tuple:
     """Run a registered scenario (by name or instance) end to end.
 
     Builds the scenario's dataset and model (``reduced=True`` shrinks both —
     the scenario-grid smoke path), then delegates to :func:`run_simulation`.
-    Returns ``(params, SimLedger)``.
+    ``Scenario.sharded`` cells (and an explicit ``mesh``) run the shard_map
+    round with the sharded client pool — when the cell is sharded and no mesh
+    is passed, :func:`build_client_mesh` spans the local devices.  Returns
+    ``(params, SimLedger)``.
     """
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if reduced:
         sc = sc.reduced()
+    if mesh is None and sc.sharded:
+        mesh = build_client_mesh(sc.fl)
+    if mesh is not None and mode == "scan":
+        raise ValueError(
+            f"scenario {sc.name!r} runs on a mesh, which sim mode 'scan' "
+            "does not support — use mode 'host' or 'prefetch' "
+            "(docs/architecture.md#limits)"
+        )
     ds = sc.build_dataset(reduced=reduced)
     init_fn, loss_fn, _ = sc.build_model(ds)
     return run_simulation(
         ds, init_fn, loss_fn, sc.fl, rounds if rounds is not None else sc.rounds,
         batch_size=sc.batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
-        seed=sc.seed if seed is None else seed,
+        seed=sc.seed if seed is None else seed, mesh=mesh,
         scenario_name=sc.name, artifact=artifact,
     )

@@ -23,6 +23,20 @@ order ``FederatedDataset.sample_round_batches`` does — one
 a pool gather produces are bitwise identical to the legacy host-built ones,
 which is what keeps the driver's sampling masks bitwise identical to the
 legacy trainer loop (gated by tests/test_sim.py).
+
+**Sharded mode** (``ClientPool(dataset, mesh=...)``): the padded pool
+buffers — the big object, ``pool × max_examples`` rows — are placed with a
+``NamedSharding`` over the client mesh axis, so each device holds only its
+``pool / axis_size`` row block.  The cohort gather then runs inside a
+shard_map: the host splits the index plan per shard (owner shard + local row
+for every cohort position), each shard performs ONE gather over its local
+pool slice (non-owned positions masked to zero), and a single ``psum_scatter``
+over the client axis hands every shard exactly its ``(n/axis_size, R, b, …)``
+cohort slice — the layout the shard_map round's ``P(client_axis)`` in_spec
+wants, with no resharding in between.  The replicated ``(pool, …)`` flatten
+of the single-device pool never exists; the only cross-shard traffic is the
+cohort-sized scatter-reduce.  Cohort order (and therefore the RNG stream and
+the sampling masks) is untouched — sharding only changes WHERE rows live.
 """
 
 from __future__ import annotations
@@ -32,6 +46,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 class RoundPlan(NamedTuple):
@@ -101,36 +116,109 @@ class ClientPool:
     addressed through a :class:`RoundPlan`, so padding is never read).  Built
     once per simulation; all subsequent per-round work is index generation on
     the host and a jitted gather on device.
+
+    With ``mesh`` given, the pool runs in **sharded mode**: the row count
+    pads to a multiple of the ``client_axis`` size, every buffer is placed
+    with ``NamedSharding(mesh, P(client_axis))`` (each device holds one row
+    block), and :meth:`gather` becomes the shard-local gather +
+    ``psum_scatter`` pipeline of the module docstring, emitting the cohort
+    batch already sharded over the client axis.
     """
 
-    def __init__(self, dataset):
+    def __init__(self, dataset, mesh=None, client_axis: str = "data"):
         self.n_clients = dataset.n_clients
         self.sizes = np.asarray(dataset.sizes())
         self.max_examples = int(self.sizes.max())
+        self.mesh, self.client_axis = mesh, client_axis
+        if mesh is not None:
+            self.axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
+        else:
+            self.axis_size = 1
+        # sharded mode pads the POOL axis so every shard owns an equal row
+        # block; padded rows hold zeros and are never referenced by a plan
+        # (plan clients always index the real dataset).
+        rows = self.n_clients + (-self.n_clients) % self.axis_size
+        self.rows_per_shard = rows // self.axis_size
+        sharding = None if mesh is None else NamedSharding(mesh, P(client_axis))
         buffers = {}
         for k, first in dataset.client_data[0].items():
-            buf = np.zeros(
-                (self.n_clients, self.max_examples) + first.shape[1:], first.dtype
-            )
+            buf = np.zeros((rows, self.max_examples) + first.shape[1:], first.dtype)
             for i, d in enumerate(dataset.client_data):
                 buf[i, : len(d[k])] = d[k]
-            buffers[k] = jnp.asarray(buf)
+            buffers[k] = (
+                jnp.asarray(buf) if sharding is None else jax.device_put(buf, sharding)
+            )
         self.buffers = buffers
+        self._sharded_gather = None if mesh is None else self._build_sharded_gather()
 
     @property
     def nbytes(self) -> int:
-        """Device bytes held by the padded pool buffers."""
+        """Device bytes held by the padded pool buffers (global, all shards)."""
         return sum(int(b.size * b.dtype.itemsize) for b in self.buffers.values())
 
     def plan(self, rng, clients, max_steps, batch_size, local_epoch=True):
         """:func:`plan_cohort` bound to this pool's client sizes."""
         return plan_cohort(rng, self.sizes, clients, max_steps, batch_size, local_epoch)
 
+    def _build_sharded_gather(self):
+        """The jitted shard-local gather + psum_scatter pipeline (module doc)."""
+        from repro.kernels.ops import get_shard_map
+
+        axis, axis_size = self.client_axis, self.axis_size
+
+        def body(buffers, owner, local_row, take, step_mask):
+            n = owner.shape[0]
+            k = n // axis_size
+            idx = jax.lax.axis_index(axis)
+            own = owner == idx
+
+            def one(buf):
+                # ONE gather over the shard's local pool slice; positions a
+                # different shard owns read row 0 and are masked to zero, so
+                # the cross-shard psum_scatter reconstructs each position
+                # from its unique owner while handing this shard only its
+                # (k, R, b, ...) cohort slice.
+                rows = buf[jnp.where(own, local_row, 0)[:, None, None], take]
+                rows = jnp.where(own.reshape((n,) + (1,) * (rows.ndim - 1)), rows, 0)
+                return jax.lax.psum_scatter(
+                    rows, axis, scatter_dimension=0, tiled=True
+                )
+
+            batch = {bk: one(v) for bk, v in buffers.items()}
+            batch["_step_mask"] = jax.lax.dynamic_slice_in_dim(step_mask, idx * k, k)
+            return batch
+
+        smap, check = get_shard_map()
+        fn = smap(
+            body,
+            mesh=self.mesh,
+            in_specs=(P(self.client_axis), P(), P(), P(), P()),
+            out_specs=P(self.client_axis),
+            **check,
+        )
+        return jax.jit(fn)
+
     def gather(self, plan: RoundPlan):
-        """Dispatch the (async, jitted) device gather of one round's batch."""
-        return _gather_jit(
+        """Dispatch the (async, jitted) device gather of one round's batch.
+
+        Sharded mode returns the batch with every leaf sharded
+        ``P(client_axis)`` — ready for the shard_map round's in_specs.
+        """
+        if self._sharded_gather is None:
+            return _gather_jit(
+                self.buffers,
+                jnp.asarray(plan.clients),
+                jnp.asarray(plan.take),
+                jnp.asarray(plan.step_mask),
+            )
+        # host side of the per-shard index plan: owner shard + local row of
+        # every cohort position (cohort ORDER is untouched — parity).
+        owner = plan.clients // self.rows_per_shard
+        local_row = plan.clients % self.rows_per_shard
+        return self._sharded_gather(
             self.buffers,
-            jnp.asarray(plan.clients),
+            jnp.asarray(owner.astype(np.int32)),
+            jnp.asarray(local_row.astype(np.int32)),
             jnp.asarray(plan.take),
             jnp.asarray(plan.step_mask),
         )

@@ -29,7 +29,10 @@ class Scenario:
 
     ``dataset`` names a synthetic factory (``femnist1|femnist2|femnist3``,
     ``charlm``, ``cifar``); ``dataset_kw`` overrides its defaults; ``paper``
-    records the section/figure the cell reproduces.
+    records the section/figure the cell reproduces.  ``sharded`` cells run
+    the shard_map round over a client mesh (``run_scenario`` builds one over
+    the local devices via ``build_client_mesh``) with the sharded
+    ``ClientPool`` — the mesh column of the experiment grid.
     """
 
     name: str
@@ -40,6 +43,7 @@ class Scenario:
     hidden: int = 64
     seed: int = 1
     paper: str = ""
+    sharded: bool = False
     dataset_kw: dict = field(default_factory=dict)
 
     def with_(self, **kw) -> "Scenario":
@@ -210,6 +214,32 @@ def _build_grid():
         dataset="femnist1",
         fl=_fl(agg_backend="pallas"),
         paper="Sec. 4.2 grid cell on the fused pallas aggregate",
+    ))
+    # Mesh/shard engine cells: the same grid cells through the explicit-
+    # collective shard_map round (clients sharded over FLConfig.client_axis,
+    # sharded ClientPool) — including the compression x availability combos
+    # the mesh path used to reject (masks stay bitwise identical to the
+    # single-device engines; docs/architecture.md §shard_map).
+    register(Scenario(
+        name="femnist1-fedavg-aocs-shard",
+        dataset="femnist1",
+        fl=_fl(agg_backend="pallas"),
+        sharded=True,
+        paper="Sec. 4.2 grid cell on the shard_map round (per-shard kernel + one psum)",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-shard-randk",
+        dataset="femnist1",
+        fl=_fl(agg_backend="pallas", compression="randk", compression_param=0.1),
+        sharded=True,
+        paper="Sec. 6 future work (rand-k x OCS) on the shard_map round",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-shard-q0.7-natural",
+        dataset="femnist1",
+        fl=_fl(availability=0.7, compression="natural"),
+        sharded=True,
+        paper="Appendix E x natural compression on the shard_map round",
     ))
 
 

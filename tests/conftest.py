@@ -1,5 +1,111 @@
+"""Shared test config + the consolidated engine-parity matrix.
+
+The parity matrix below is THE single definition of "every round path must
+make identical sampling decisions": (engine × agg_backend × cache_groups ×
+compression × availability) combos, all judged against one oracle round
+(vmap + jnp).  ``tests/test_round_engine.py``, ``tests/test_shard_round.py``
+and the shard-compression tests all consume it — one matrix, one oracle, so
+a new engine axis (or a new compressor) extends parity coverage in one
+place.
+
+Shard combos build their mesh over the live device set (largest divisor of
+``n_clients``): 1 device in the plain tier-1 run, 4 in the CI ``shard-smoke``
+job (``XLA_FLAGS=--xla_force_host_platform_device_count=4``), so the same
+tests gate both the plumbing and real multi-shard collectives.
+"""
+
 import os
 
 # Tests run on the single real CPU device.  The dry-run (and only it) forces
 # 512 host devices in its own process; test_dryrun launches subprocesses.
+# The CI shard-smoke job instead forces 4 host devices for this whole
+# process, which the shard combos below pick up automatically.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+# --- the engine-parity matrix -------------------------------------------
+
+# fl-config variants swept over every engine combo: compression kinds
+# (incl. the mesh path since PR 5) x partial availability (Appendix E).
+PARITY_VARIANTS = {
+    "plain": {},
+    "randk": {"compression": "randk", "compression_param": 0.5},
+    "qsgd": {"compression": "qsgd", "compression_param": 8},
+    "natural": {"compression": "natural"},
+    "avail": {"availability": 0.7},
+    "randk+avail": {"compression": "randk", "compression_param": 0.5,
+                    "availability": 0.7},
+}
+
+# (engine, agg_backend, cache_groups): vmap combos, scan combos at every
+# cache regime (None = config default i.e. fully cached at these sizes,
+# 0 = all-recompute, 1 = hits and spills in one round), and the shard_map
+# round on both backends.  ("vmap", "jnp", None) is the oracle.
+PARITY_ENGINES = (
+    [("vmap", be, None) for be in ("jnp", "pallas")]
+    + [("scan", be, cg) for be in ("jnp", "pallas") for cg in (None, 0, 1)]
+    + [("shard", be, None) for be in ("jnp", "pallas")]
+)
+
+PARITY_ORACLE = ("vmap", "jnp", None)
+
+
+def parity_fl(variant: str, **kw):
+    """The matrix's FLConfig for one variant (n=8 so every mesh size that
+    divides 8 — 1, 2, 4, 8 emulated devices — can shard it)."""
+    from repro.configs.base import FLConfig
+
+    return FLConfig(n_clients=8, expected_clients=3, sampler="aocs",
+                    local_steps=2, lr_local=0.1,
+                    **{**PARITY_VARIANTS[variant], **kw})
+
+
+def parity_workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
+    """(init, loss, batch): the tiny MLP round workload every parity test
+    shares."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.simple import mlp_classifier
+
+    init, loss, _ = mlp_classifier(din, classes, hidden=8)
+    rng = np.random.default_rng(seed)
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(n, steps, b, din)).astype("float32")),
+        "y": jnp.asarray(rng.integers(0, classes, (n, steps, b)).astype("int32")),
+    }
+    return init, loss, batch
+
+
+def parity_mesh(fl):
+    """The shard combos' mesh: THE driver's ``build_client_mesh`` (largest
+    local device count dividing ``fl.n_clients``), so the matrix gates
+    exactly the mesh shape production runs use."""
+    from repro.sim.driver import build_client_mesh
+
+    return build_client_mesh(fl)
+
+
+def run_parity_combo(engine, backend, cache_groups, loss, fl, params, batch,
+                     weights, key):
+    """Execute one matrix combo's round step; returns (params', opt, metrics).
+
+    ``engine='shard'`` runs the shard_map round via ``make_engine(mesh=...)``
+    on :func:`parity_mesh`; the single-device engines run through
+    :class:`RoundEngine` with ``scan_group=4``.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.fl.engine import RoundEngine, make_engine
+
+    if engine == "shard":
+        fl_be = dataclasses.replace(fl, agg_backend=backend)
+        step = jax.jit(make_engine(loss, fl_be, mesh=parity_mesh(fl)))
+    else:
+        step = jax.jit(
+            RoundEngine(loss, fl, memory=engine, backend=backend,
+                        scan_group=4, cache_groups=cache_groups).make_step()
+        )
+    return step(params, (), batch, weights, key)

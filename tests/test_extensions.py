@@ -11,6 +11,7 @@ from repro.core import ocs
 from repro.core.compression import (
     compress_update,
     compressed_bits_per_update,
+    natural_leaf,
     qsgd_leaf,
     rand_k_leaf,
 )
@@ -20,20 +21,34 @@ from repro.fl.round import client_weights, make_round
 def test_compressors_unbiased():
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (400,))
-    for fn, arg in ((rand_k_leaf, 0.25), (qsgd_leaf, 8)):
+    cases = ((rand_k_leaf, (0.25,)), (qsgd_leaf, (8,)), (natural_leaf, ()))
+    for fn, args in cases:
         acc = jnp.zeros_like(x)
         trials = 2000
         for i in range(trials):
-            acc = acc + fn(x, arg, jax.random.fold_in(key, i))
+            acc = acc + fn(x, *args, jax.random.fold_in(key, i))
         mean = acc / trials
         err = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
         assert err < 0.1, (fn.__name__, err)
+
+
+def test_natural_leaf_powers_of_two():
+    """Natural compression only ever emits signed powers of two (and exact
+    zeros), which is what makes its 9-bit (sign + exponent) bill honest."""
+    key = jax.random.PRNGKey(4)
+    x = jnp.concatenate([jax.random.normal(key, (257,)), jnp.zeros((3,))])
+    y = np.asarray(natural_leaf(x, jax.random.fold_in(key, 1)))
+    nz = y[y != 0]
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-6)
+    assert np.all(y[np.asarray(x) == 0] == 0)
 
 
 def test_compressed_bits_much_smaller():
     d = 1_000_000
     assert compressed_bits_per_update(d, "randk", 0.05) < 0.1 * d * 32
     assert compressed_bits_per_update(d, "qsgd", 4) < 0.15 * d * 32
+    assert compressed_bits_per_update(d, "natural", 0) == d * 9
     assert compressed_bits_per_update(d, "none", 0) == d * 32
 
 

@@ -1,9 +1,9 @@
-"""Round-engine parity: the (vmap | scan) x (jnp | pallas) matrix produces
-bitwise-identical sampling decisions and allclose aggregates for the same
-round key — including the configs the old scan path silently dropped
-(compression, partial availability) and every update-cache size of the
-single-pass scan engine (0 = all-recompute, partial = hits and spills in one
-round, full = no recompute) — plus the fused masked-aggregate kernel vs its
+"""Round-engine parity through the consolidated matrix (tests/conftest.py):
+every (engine x agg_backend x cache_groups x compression x availability)
+combo — vmap, single-pass scan at every cache regime, AND the shard_map
+round — must draw bitwise-identical sampling decisions, bill identical
+per-round bits, and produce allclose aggregates against the single
+vmap+jnp oracle round — plus the fused masked-aggregate kernel vs its
 oracle and the unified round_bits accounting."""
 
 import itertools
@@ -12,66 +12,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import (
+    PARITY_ENGINES,
+    PARITY_ORACLE,
+    PARITY_VARIANTS,
+    parity_fl,
+    parity_workload,
+    run_parity_combo,
+)
 
 from repro.configs.base import FLConfig
 from repro.core import ocs
 from repro.core.bits import BitsLedger
 from repro.fl.engine import RoundEngine
-from repro.fl.round import client_weights, make_round, round_bits
+from repro.fl.round import client_weights, make_round, round_bits, round_bits_duplex
 from repro.kernels import ops, ref
 from repro.models.simple import mlp_classifier
 
 COMBOS = list(itertools.product(["vmap", "scan"], ["jnp", "pallas"]))
 
-# the full parity matrix: vmap combos plus the scan combos at every cache
-# regime (None = the engine/config default, i.e. fully cached at these sizes)
-ENGINES = [("vmap", be, None) for be in ("jnp", "pallas")] + [
-    ("scan", be, cg) for be in ("jnp", "pallas") for cg in (None, 0, 1)
-]
 
-
-def _workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
-    init, loss, _ = mlp_classifier(din, classes, hidden=8)
-    rng = np.random.default_rng(seed)
-    batch = {
-        "x": jnp.asarray(rng.normal(size=(n, steps, b, din)).astype("float32")),
-        "y": jnp.asarray(rng.integers(0, classes, (n, steps, b)).astype("int32")),
-    }
-    return init, loss, batch
-
-
-@pytest.mark.parametrize(
-    "fl_kw",
-    [
-        {},
-        {"compression": "randk", "compression_param": 0.5},
-        {"compression": "qsgd", "compression_param": 8},
-        {"availability": 0.7},
-        {"compression": "randk", "compression_param": 0.5, "availability": 0.7},
-    ],
-    ids=["plain", "randk", "qsgd", "avail", "randk+avail"],
-)
-def test_engine_matrix_parity(fl_kw):
-    """Same key => identical norms/probs/mask and allclose params across all
-    engine combinations — including single-pass scan at every cache regime
-    vs vmap (acceptance criterion of the engine refactors)."""
-    init, loss, batch = _workload()
-    fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
-                  lr_local=0.1, **fl_kw)
+@pytest.mark.parametrize("variant", sorted(PARITY_VARIANTS), ids=str)
+def test_engine_matrix_parity(variant):
+    """Same key => identical masks/norms/probs, equal round_bits_duplex and
+    allclose params across the WHOLE matrix — single-pass scan at every cache
+    regime and the shard_map round included (acceptance criterion of the
+    engine refactors and of the mesh-compression PR)."""
+    init, loss, batch = parity_workload()
+    fl = parity_fl(variant)
     params = init(jax.random.PRNGKey(0))
     w = client_weights(fl)
     key = jax.random.PRNGKey(7)
-    outs = {}
-    for mem, be, cg in ENGINES:
-        step = jax.jit(
-            RoundEngine(loss, fl, memory=mem, backend=be, scan_group=4,
-                        cache_groups=cg).make_step()
-        )
-        outs[(mem, be, cg)] = step(params, (), batch, w, key)
-    p_ref, _, m_ref = outs[("vmap", "jnp", None)]
+    dim = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    outs = {
+        combo: run_parity_combo(*combo, loss, fl, params, batch, w, key)
+        for combo in PARITY_ENGINES
+    }
+    p_ref, _, m_ref = outs[PARITY_ORACLE]
     assert int(jnp.sum(m_ref.mask)) > 0  # the round actually sampled someone
+    bits_ref = round_bits_duplex(fl, dim, m_ref.mask)
     for combo, (p2, _, m2) in outs.items():
         assert np.array_equal(np.asarray(m_ref.mask), np.asarray(m2.mask)), combo
+        # one oracle bill: equal masks AND the same fl => equal duplex bits
+        assert round_bits_duplex(fl, dim, m2.mask) == bits_ref, combo
         np.testing.assert_allclose(
             np.asarray(m_ref.norms), np.asarray(m2.norms), atol=1e-6, err_msg=str(combo)
         )
@@ -85,17 +68,18 @@ def test_engine_matrix_parity(fl_kw):
 
 
 def test_engine_matrix_parity_server_opt():
-    """A stateful server optimizer composes identically on every path."""
+    """A stateful server optimizer composes identically on every path (the
+    shard combos sit this one out: server_opt needs mesh=None)."""
     from repro.optim import sgd
 
-    init, loss, batch = _workload()
+    init, loss, batch = parity_workload()
     fl = FLConfig(n_clients=8, expected_clients=3, sampler="optimal", local_steps=2,
                   lr_local=0.1)
     params0 = init(jax.random.PRNGKey(0))
     w = client_weights(fl)
     key = jax.random.PRNGKey(11)
     finals = []
-    for mem, be, cg in ENGINES:
+    for mem, be, cg in [c for c in PARITY_ENGINES if c[0] != "shard"]:
         opt = sgd(0.5, momentum=0.9)
         step = jax.jit(
             RoundEngine(loss, fl, opt, memory=mem, backend=be, scan_group=2,
@@ -115,7 +99,7 @@ def test_engine_matrix_parity_server_opt():
 
 def test_engine_config_driven_selection():
     """FLConfig.round_engine / agg_backend alone select the path (trainer wiring)."""
-    init, loss, batch = _workload()
+    init, loss, batch = parity_workload()
     key = jax.random.PRNGKey(3)
     outs = []
     for mem, be in COMBOS:
@@ -131,7 +115,7 @@ def test_engine_config_driven_selection():
 
 
 def test_engine_rejects_bad_config():
-    init, loss, _ = _workload()
+    init, loss, _ = parity_workload()
     fl = FLConfig(n_clients=8, expected_clients=3)
     with pytest.raises(ValueError, match="memory policy"):
         RoundEngine(loss, fl, memory="pmap")
@@ -139,6 +123,9 @@ def test_engine_rejects_bad_config():
         RoundEngine(loss, fl, backend="cuda")
     with pytest.raises(ValueError, match="scan_group"):
         RoundEngine(loss, fl, memory="scan", scan_group=3)
+    with pytest.raises(ValueError, match="compressor"):
+        RoundEngine(loss, FLConfig(n_clients=8, expected_clients=3,
+                                   compression="gzip"))
 
 
 @pytest.mark.parametrize("clients", [1, 3, 8])

@@ -1,0 +1,129 @@
+"""Hypothesis property suite for ``core/ocs.py::sampling_plan`` — the single
+copy of the per-round sampling math every engine path shares.
+
+Properties (all seeded, ``deadline=None`` so CI stays deterministic):
+
+* the inclusion probabilities sum to the target m whenever at least m
+  clients have non-zero norm (budget feasibility of Eq. 7 / Alg. 2);
+* Eq. 4 unbiasedness of the estimator coefficients under the drawn mask:
+  ``scale_i = mask_i * w_i / p_i`` exactly, so ``E[scale_i] = w_i`` for every
+  client the plan can sample (verified both as the deterministic identity
+  and by a fixed-key Monte-Carlo average);
+* the plan is invariant under client permutation: permuting the norm vector
+  permutes the probabilities and leaves alpha/gamma/sum(p) unchanged.
+
+Guarded like tests/test_sampling.py: without hypothesis (pip install -e
+.[test]) only the property tests skip — the deterministic Monte-Carlo test
+below still runs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, seed, settings, strategies as st
+except ImportError:
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def seed(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="property tests need hypothesis")
+
+from repro.core import ocs
+
+_EPS = 1e-12
+
+norm_vectors = st.lists(
+    st.floats(min_value=0.0, max_value=1e4, allow_nan=False, width=32),
+    min_size=2,
+    max_size=48,
+)
+
+
+def _m_for(u_list):
+    return max(1, len(u_list) // 3)
+
+
+@seed(20260730)
+@settings(max_examples=100, deadline=None)
+@given(norm_vectors, st.integers(min_value=0, max_value=1 << 20))
+def test_plan_probabilities_sum_to_m(u_list, key_int):
+    u = jnp.asarray(u_list, jnp.float32)
+    m = _m_for(u_list)
+    plan = ocs.sampling_plan(
+        u, jnp.full((len(u_list),), 1.0 / len(u_list)), m,
+        jax.random.PRNGKey(key_int), sampler="optimal",
+    )
+    p = np.asarray(plan.probs)
+    assert np.all(p >= -1e-6) and np.all(p <= 1 + 1e-6)
+    assert float(plan.expected_clients) <= m + 1e-3 * m + 1e-4
+    if (np.asarray(u) > _EPS).sum() >= m:
+        assert float(plan.expected_clients) == pytest.approx(m, rel=2e-3)
+
+
+@seed(20260731)
+@settings(max_examples=100, deadline=None)
+@given(norm_vectors, st.integers(min_value=0, max_value=1 << 20))
+def test_plan_scale_unbiased_under_mask(u_list, key_int):
+    """Eq. 4: scale_i == mask_i * w_i / p_i exactly, so the aggregate
+    sum_i scale_i U_i is conditionally unbiased given the probabilities."""
+    n = len(u_list)
+    u = jnp.asarray(u_list, jnp.float32)
+    w = jnp.asarray(np.linspace(0.5, 1.5, n) / np.linspace(0.5, 1.5, n).sum(),
+                    jnp.float32)
+    m = _m_for(u_list)
+    plan = ocs.sampling_plan(u, w, m, jax.random.PRNGKey(key_int))
+    p, mask, scale = map(np.asarray, (plan.probs, plan.mask, plan.scale))
+    want = np.where(mask & (p > _EPS), np.asarray(w) / np.maximum(p, _EPS), 0.0)
+    np.testing.assert_allclose(scale, want, rtol=1e-6, atol=1e-7)
+    # unmasked clients never contribute; masked ones are exactly reweighted
+    assert np.all(scale[~mask] == 0.0)
+
+
+def test_plan_scale_monte_carlo_unbiased():
+    """Fixed-key Monte-Carlo: E[scale_i] -> w_i over the Bernoulli draw for
+    every client with p_i bounded away from 0 (the estimator the paper's
+    Eq. 4 variance analysis assumes)."""
+    u = jnp.asarray([1.0, 2.0, 0.5, 4.0, 1.5, 3.0], jnp.float32)
+    n = u.shape[0]
+    w = jnp.full((n,), 1.0 / n)
+    m = 3
+    draws = jax.vmap(
+        lambda k: ocs.sampling_plan(u, w, m, k).scale
+    )(jax.random.split(jax.random.PRNGKey(0), 4000))
+    mean = np.asarray(draws).mean(0)
+    np.testing.assert_allclose(mean, np.asarray(w), rtol=0.1)
+
+
+@seed(20260732)
+@settings(max_examples=100, deadline=None)
+@given(norm_vectors, st.randoms(use_true_random=False))
+def test_plan_invariant_under_permutation(u_list, rnd):
+    """Permuting the clients permutes the probabilities and leaves the
+    scalar summaries (alpha, gamma, sum p) unchanged."""
+    u = np.asarray(u_list, np.float32)
+    n = len(u_list)
+    m = _m_for(u_list)
+    perm = np.arange(n)
+    rnd.shuffle(perm)
+    w = jnp.full((n,), 1.0 / n)
+    key = jax.random.PRNGKey(3)
+    a = ocs.sampling_plan(jnp.asarray(u), w, m, key, sampler="optimal")
+    b = ocs.sampling_plan(jnp.asarray(u[perm]), w, m, key, sampler="optimal")
+    np.testing.assert_allclose(np.asarray(b.probs), np.asarray(a.probs)[perm],
+                               atol=2e-4)
+    assert float(b.alpha) == pytest.approx(float(a.alpha), abs=2e-4)
+    assert float(b.gamma) == pytest.approx(float(a.gamma), abs=2e-4)
+    assert float(b.expected_clients) == pytest.approx(
+        float(a.expected_clients), abs=2e-3)

@@ -1,11 +1,93 @@
-"""shard_map FL round (explicit collectives) matches the GSPMD round under
-full participation, on a forced multi-device mesh (subprocess)."""
+"""shard_map FL round: compression/availability parity against the oracle
+round through the shared matrix (tests/conftest.py — the shard-compression
+gate of the mesh-parity PR), factory-time config validation that never
+consumes a PRNG key, and the GSPMD-vs-explicit-collectives training smoke on
+a forced multi-device mesh (subprocess)."""
 
 import os
 import subprocess
 import sys
 
+import jax
+import numpy as np
+import pytest
+from conftest import (
+    PARITY_ORACLE,
+    PARITY_VARIANTS,
+    parity_fl,
+    parity_mesh,
+    parity_workload,
+    run_parity_combo,
+)
+
+from repro.configs.base import FLConfig
+from repro.fl.shard_round import make_shard_map_round, validate_shard_config
+
 ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.parametrize("variant", ["randk", "qsgd", "natural", "randk+avail"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_shard_compression_parity(variant, backend):
+    """The shard-compression gate: a compressing config on the mesh path
+    draws bitwise-identical masks and allclose norms/params vs the oracle
+    round (the configs the shard path used to reject).  Runs on however many
+    emulated devices divide n_clients — 1 in tier-1, 4 in the CI shard-smoke
+    job."""
+    init, loss, batch = parity_workload()
+    fl = parity_fl(variant)
+    params = init(jax.random.PRNGKey(0))
+    w = jax.numpy.full((fl.n_clients,), 1.0 / fl.n_clients, jax.numpy.float32)
+    key = jax.random.PRNGKey(7)
+    p_ref, _, m_ref = run_parity_combo(*PARITY_ORACLE, loss, fl, params, batch, w, key)
+    p2, _, m2 = run_parity_combo("shard", backend, None, loss, fl, params, batch,
+                                 w, key)
+    assert int(np.sum(np.asarray(m_ref.mask))) > 0
+    assert np.array_equal(np.asarray(m_ref.mask), np.asarray(m2.mask))
+    np.testing.assert_allclose(np.asarray(m_ref.norms), np.asarray(m2.norms),
+                               atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(p_ref), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_rejected_config_consumes_no_rng(monkeypatch):
+    """Regression: config validation must run BEFORE any PRNG use, so a
+    rejected config leaves the caller's key stream untouched (an earlier
+    layout interleaved checks with the round body).  The factory itself must
+    also never split keys for a VALID config — keys are only consumed inside
+    the returned round_step."""
+    _, loss, _ = parity_workload()
+    mesh = parity_mesh(parity_fl("plain"))
+    calls = []
+    orig_split, orig_fold = jax.random.split, jax.random.fold_in
+    monkeypatch.setattr(jax.random, "split",
+                        lambda *a, **k: (calls.append("split"), orig_split(*a, **k))[1])
+    monkeypatch.setattr(jax.random, "fold_in",
+                        lambda *a, **k: (calls.append("fold_in"), orig_fold(*a, **k))[1])
+    for bad in (
+        FLConfig(n_clients=8, expected_clients=3, compression="gzip"),
+        FLConfig(n_clients=8, expected_clients=3, agg_backend="cuda"),
+    ):
+        with pytest.raises(ValueError):
+            make_shard_map_round(loss, bad, mesh)
+    with pytest.raises(ValueError, match="divide"):
+        validate_shard_config(FLConfig(n_clients=9, expected_clients=3), 2)
+    # ...and a valid factory call is key-free too (consumption is per-round)
+    make_shard_map_round(loss, parity_fl("plain"), mesh)
+    assert not calls
+
+
+def test_shard_config_error_messages():
+    """The validation errors name the offending value and the legal set."""
+    with pytest.raises(ValueError, match=r"gzip.*none.*randk"):
+        validate_shard_config(
+            FLConfig(n_clients=8, expected_clients=3, compression="gzip"), 1
+        )
+    with pytest.raises(ValueError, match=r"cuda.*jnp.*pallas"):
+        validate_shard_config(
+            FLConfig(n_clients=8, expected_clients=3, agg_backend="cuda"), 1
+        )
+
 
 CODE = """
 import os
@@ -34,8 +116,9 @@ err = max(float(jnp.abs(a - b).max())
 assert err < 1e-5, err
 nerr = float(jnp.abs(m1.norms - m2.norms).max())
 assert nerr < 1e-5, nerr
-# OCS sampler also runs and trains
-fl2 = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2, lr_local=0.1)
+# OCS sampler also runs and trains — WITH compression on the mesh path
+fl2 = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
+               lr_local=0.1, compression="randk", compression_param=0.5)
 with mesh:
     step2 = jax.jit(make_shard_map_round(loss, fl2, mesh))
     pp = params

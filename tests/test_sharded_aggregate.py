@@ -68,25 +68,25 @@ def test_tree_shard_aggregate_matches_tree_masked_aggregate():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
 
 
-def test_shard_round_rejects_compression():
-    """A compressing config must be rejected on the shard path, not silently
-    aggregated uncompressed (which would mis-bill round_bits) — and the error
-    must carry the remediation (mesh=None engine / unset fl.compression) plus
-    the docs/architecture.md#limits cross-link."""
+def test_shard_round_rejects_server_opt():
+    """The remaining mesh limit: a stateful server optimizer is still a
+    single-device-engine feature (the shard body models the master step as
+    plain lr_global SGD) and must be rejected, never silently dropped.
+    Compression is NOT rejected any more — it runs inside the shard body
+    (gated by tests/test_shard_round.py::test_shard_compression_parity)."""
     from repro.configs.base import FLConfig
     from repro.fl.engine import make_engine
     from repro.models.simple import mlp_classifier
+    from repro.optim import sgd
 
     mesh = jax.make_mesh((1,), ("data",))
     _, loss, _ = mlp_classifier(4, 2, hidden=4)
     fl = FLConfig(n_clients=4, expected_clients=2, compression="randk",
                   compression_param=0.5)
-    with pytest.raises(ValueError, match="compression") as err:
-        make_engine(loss, fl, mesh=mesh)
-    msg = str(err.value)
-    assert "mesh=None" in msg                         # remediation 1
-    assert "compression='none'" in msg                # remediation 2
-    assert "docs/architecture.md#limits" in msg       # docs anchor
+    with pytest.raises(ValueError, match="server_opt"):
+        make_engine(loss, fl, sgd(0.5), mesh=mesh)
+    # the compressing config itself now builds a round step
+    assert callable(make_engine(loss, fl, mesh=mesh))
 
 
 def test_mesh_level_wrapper_one_device():
@@ -144,20 +144,29 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import FLConfig
 from repro.fl.engine import RoundEngine, make_engine
-from repro.fl.round import client_weights
+from repro.fl.round import client_weights, round_bits_duplex
 from repro.models.simple import mlp_classifier
 
 mesh = jax.make_mesh((4,), ("data",))
 init, loss, _ = mlp_classifier(12, 3, hidden=8)
 params = init(jax.random.PRNGKey(0))
+dim = sum(x.size for x in jax.tree_util.tree_leaves(params))
 rng = np.random.default_rng(1)
 batch = {"x": jnp.asarray(rng.normal(size=(8, 2, 4, 12)).astype("float32")),
          "y": jnp.asarray(rng.integers(0, 3, (8, 2, 4)).astype("int32"))}
 key = jax.random.PRNGKey(7)
 
-for be, avail in (("jnp", 1.0), ("pallas", 1.0), ("pallas", 0.7)):
+# (backend, availability, compression, param): the mesh cells incl. the
+# compression x availability combos the shard path used to reject.
+for be, avail, comp, cp in (("jnp", 1.0, "none", 0.0),
+                            ("pallas", 1.0, "none", 0.0),
+                            ("pallas", 0.7, "none", 0.0),
+                            ("pallas", 1.0, "randk", 0.5),
+                            ("jnp", 1.0, "natural", 0.0),
+                            ("pallas", 0.7, "randk", 0.5)):
     fl = FLConfig(n_clients=8, expected_clients=3, sampler="aocs", local_steps=2,
-                  lr_local=0.1, agg_backend=be, availability=avail)
+                  lr_local=0.1, agg_backend=be, availability=avail,
+                  compression=comp, compression_param=cp)
     w = client_weights(fl)
     shard_step = jax.jit(make_engine(loss, fl, mesh=mesh))
     ps, _, ms = shard_step(params, (), batch, w, key)
@@ -166,15 +175,17 @@ for be, avail in (("jnp", 1.0), ("pallas", 1.0), ("pallas", 0.7)):
         eng = RoundEngine(loss, fl, memory=mem, backend=be, scan_group=4)
         p1, _, m1 = jax.jit(eng.make_step())(params, (), batch, w, key)
         # bitwise-identical sampling decisions across the mesh boundary
-        assert np.array_equal(np.asarray(m1.mask), np.asarray(ms.mask)), (be, mem)
+        assert np.array_equal(np.asarray(m1.mask), np.asarray(ms.mask)), (be, mem, comp)
+        # ...and therefore an identical duplex bits bill (compression incl.)
+        assert round_bits_duplex(fl, dim, m1.mask) == round_bits_duplex(fl, dim, ms.mask)
         np.testing.assert_allclose(np.asarray(m1.norms), np.asarray(ms.norms),
-                                   atol=1e-6, err_msg=f"{be}/{mem}")
+                                   atol=1e-6, err_msg=f"{be}/{mem}/{comp}")
         np.testing.assert_allclose(np.asarray(m1.probs), np.asarray(ms.probs),
-                                   atol=1e-6, err_msg=f"{be}/{mem}")
+                                   atol=1e-6, err_msg=f"{be}/{mem}/{comp}")
         for a, b in zip(jax.tree_util.tree_leaves(p1),
                         jax.tree_util.tree_leaves(ps)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
-                                       err_msg=f"{be}/{mem}")
+                                       err_msg=f"{be}/{mem}/{comp}")
 print("SHARD-PARITY-OK")
 """
 
@@ -197,5 +208,6 @@ def test_sharded_aggregate_multi_device_subprocess():
 def test_shard_round_engine_parity_subprocess():
     """Acceptance gate: the shard_map round (per-shard pallas kernel + one
     psum) matches every single-device RoundEngine path on the emulated
-    4-device mesh — bitwise-identical masks, allclose params."""
+    4-device mesh — bitwise-identical masks, equal duplex bits and allclose
+    params, compression and availability combos included."""
     _run_subprocess(ROUND_PARITY_CODE, "SHARD-PARITY-OK")

@@ -47,10 +47,13 @@ DOCSTRING_CONTRACT = [
     ("src/repro/fl/engine.py", None, ["Eq. 2", "Appendix E"]),
     ("src/repro/fl/engine.py", "make_engine", ["Alg. 2", "Eq. 2"]),
     ("src/repro/fl/engine.py", "RoundEngine", ["Eq. 7", "Eq. 2"]),
-    ("src/repro/fl/shard_round.py", None, ["all_gather", "psum"]),
+    ("src/repro/fl/engine.py", "compress_client_updates", ["bitwise"]),
+    ("src/repro/fl/shard_round.py", None, ["all_gather", "psum", "compress"]),
+    ("src/repro/fl/shard_round.py", "validate_shard_config", ["PRNG"]),
     ("src/repro/core/bits.py", None, ["Remark 3", "footnote 5"]),
-    ("src/repro/sim/pool.py", None, ["double-buffered", "prefetch", "bitwise"]),
-    ("src/repro/sim/pool.py", "ClientPool", ["evice-resident"]),
+    ("src/repro/sim/pool.py", None, ["double-buffered", "prefetch", "bitwise",
+                                     "NamedSharding", "psum_scatter"]),
+    ("src/repro/sim/pool.py", "ClientPool", ["evice-resident", "harded"]),
     ("src/repro/sim/pool.py", "plan_cohort", ["sample_round_batches"]),
     ("src/repro/sim/scenarios.py", None, ["Sec. 4", "experiment grid"]),
     ("src/repro/sim/driver.py", None, ["ledger", "schema", "uplink and downlink"]),
@@ -76,7 +79,7 @@ FULL_COVERAGE_MODULES = [
 ]
 
 ARCHITECTURE_MUSTS = [
-    "all_gather", "psum", '"schema": 3', "mesh_axis_size",
+    "all_gather", "psum", '"schema": 4', "mesh_axis_size",
     # the scan-engine dataflow section (two-pass vs single-pass + memory
     # formulas) must survive future edits
     "Scan engine dataflow", "cache_groups·scan_group·d", "## Limits",
@@ -84,20 +87,27 @@ ARCHITECTURE_MUSTS = [
     # dataflow, the ledger contract and the mode-parity guarantee
     "Simulation subsystem", "scan-over-rounds", "round_bits_duplex",
     "validate_ledger", "bitwise-identical per-round participation masks",
+    # the mesh-parity PR's contract: compression inside the shard body, the
+    # sharded pool's gather pipeline, and the honest remaining limits
+    "Compression runs INSIDE the shard body", "Sharded pool gather",
+    "psum_scatter", "NamedSharding", "no longer a limit",
+    "honest remaining limits",
 ]
 # docs/paper_map.md must keep the Sec. 4 experiment-grid rows that bind the
-# paper's evaluation setup to the sim subsystem.
+# paper's evaluation setup to the sim subsystem, plus the mesh-path rows.
 PAPER_MAP_MUSTS = [
     "src/repro/sim/scenarios.py", "src/repro/sim/driver.py",
     "Sec. 4 — experiment grid", "Sec. 4 — multi-round evaluation loop",
+    "mesh-sharded client pool", "compress_client_updates",
 ]
-# docs/benchmarks.md: the run recipe, the schema-3 field contract, and the
+# docs/benchmarks.md: the run recipe, the schema-4 field contract, and the
 # default-gating policy — enforced so the CI docs job catches drift between
 # the harness and its documentation.
 BENCHMARKS_MUSTS = [
     "bench_round_engine", "local_update_evals", "--smoke", "cache_groups",
     "us_per_round", "pallas_interpret", "round_engine.json",
     "bench_sim", "sim.json", "rounds_per_sec",
+    "host+shard", "prefetch+shard", "mesh_axis_size", "build_client_mesh",
 ]
 README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md"]
 
