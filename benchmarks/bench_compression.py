@@ -9,7 +9,7 @@ import time
 
 import jax.numpy as jnp
 
-from benchmarks.common import csv_line, run_method
+from benchmarks.common import csv_line
 from repro.configs.base import FLConfig
 from repro.data import eval_split, femnist_like
 from repro.fl.trainer import run_training

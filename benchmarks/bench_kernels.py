@@ -9,11 +9,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import csv_line
 from repro.core import ocs
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.models.layers import chunked_attention
 
 

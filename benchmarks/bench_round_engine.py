@@ -21,14 +21,26 @@ Since schema 4 the shard_map combos run the compression axis too
 (fl/shard_round.py) with masks bitwise identical to the single-device
 engines, asserted per combo here.
 
-Artifact: benchmarks/artifacts/round_engine.json (schema 4 — see
+Since schema 5 the compression sweep covers qsgd as well, and the pallas
+combos aggregate through the in-stream compress kernels
+(kernels/norm_aggregate.py / kernels/sharded_aggregate.py): mask/quantize
+happens inside the same HBM tile stream as the Eq. 2 contraction, one read
+per raw update, no materialised ``C(U)``.  randk's mask also moved from a
+permutation sort to a stratified exact-k argmin draw, so the schema-4
+baseline's randk timings are NOT comparable — the schema bump sanctions the
+regenerated baseline.  The workload block records both properties
+(``mask_parity``, ``fused_compression``), checked by tools/check_bench.py in
+the CI bench-regression job.
+
+Artifact: benchmarks/artifacts/round_engine.json (schema 5 — see
 docs/benchmarks.md for the field contract and docs/architecture.md for how
-the numbers gate the FLConfig defaults; schema 3 lacked the compressed
+the numbers gate the FLConfig defaults; schema 4 lacked the qsgd sweep, the
+fused in-stream compression and the parity flags, schema 3 the compressed
 ``shard+*`` combos, schema 2 the cache combos and ``local_update_evals``,
 schema 1 also the ``schema`` field and the ``shard+*`` combos).
 
 ``python -m benchmarks.bench_round_engine --smoke`` runs tiny shapes and
-asserts the schema-4 contract (the CI bench-smoke step).
+asserts the schema-5 contract (the CI bench-regression step).
 """
 
 from __future__ import annotations
@@ -52,7 +64,7 @@ from repro.models.simple import mlp_classifier
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
-SCHEMA = 4
+SCHEMA = 5
 
 # keys every combo entry must carry (checked by smoke() / the CI bench step)
 COMBO_KEYS = {
@@ -111,16 +123,25 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
             "backend_platform": jax.default_backend(),
             "pallas_interpret": jax.default_backend() != "tpu",
             "mesh_devices": n_dev,
+            # schema-5 invariants, asserted below and re-checked by
+            # tools/check_bench.py against the committed baseline:
+            # every combo of a sweep saw bitwise-identical masks, and the
+            # pallas combos compress inside the aggregate tile stream.
+            "mask_parity": True,
+            "fused_compression": True,
         },
         "combos": {},
     }
     shard_ok = n % max(n_dev, 1) == 0
     mesh = None  # built from the first shard combo's fl.client_axis
-    for compression in ("none", "randk"):
+    for compression in ("none", "randk", "qsgd"):
+        # per-kind parameter: randk keeps 10% of coordinates, qsgd uses
+        # 8 quantization levels ("none" ignores it).
+        comp_param = {"randk": 0.1, "qsgd": 8}.get(compression, 0.1)
         fl = FLConfig(
             n_clients=n, expected_clients=m, sampler="aocs",
             local_steps=local_steps, lr_local=0.125,
-            compression=compression, compression_param=0.1,
+            compression=compression, compression_param=comp_param,
         )
         weights = client_weights(fl)
         sfx = "" if compression == "none" else f"+{compression}"
@@ -161,7 +182,7 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
                 fl_be = FLConfig(
                     n_clients=n, expected_clients=m, sampler="aocs",
                     local_steps=local_steps, lr_local=0.125, agg_backend=be,
-                    compression=compression, compression_param=0.1,
+                    compression=compression, compression_param=comp_param,
                 )
                 if mesh is None:
                     mesh = jax.make_mesh((n_dev,), (fl_be.client_axis,))
@@ -203,26 +224,32 @@ def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,
 
 
 def smoke():
-    """CI gate: tiny-shape run + schema-4 contract assertions.
+    """CI gate: tiny-shape run + schema-5 contract assertions.
 
     Keeps the benchmark from silently rotting — the artifact must carry the
-    schema marker, the per-combo key set, the cache metadata on scan combos,
-    the compressed shard combos (the mesh-compression gate), and the
-    cached < recompute local_update_evals relation.  Writes to its own
-    (git-ignored) artifact so a local smoke run never clobbers the committed
-    round_engine.json CPU baseline.
+    schema marker, the parity/fusion workload flags, the per-combo key set,
+    the cache metadata on scan combos, the compressed shard combos (the
+    mesh-compression gate), and the cached < recompute local_update_evals
+    relation.  Writes to its own (git-ignored) artifact so a local smoke run
+    never clobbers the committed round_engine.json CPU baseline; the CI
+    bench-regression job then diffs the smoke artifact against that baseline
+    with tools/check_bench.py.
     """
     res = run(n=8, m=3, local_steps=2, batch_size=4, reps=1, scan_group=4,
               artifact="round_engine_smoke.json")
     assert res["schema"] == SCHEMA, res["schema"]
     assert {"n_clients", "scan_group", "pallas_interpret",
             "mesh_devices"} <= set(res["workload"])
+    assert res["workload"]["mask_parity"] is True
+    assert res["workload"]["fused_compression"] is True
     tags = ["vmap+jnp", "vmap+pallas", "scan+jnp", "scan+pallas",
-            "scan+jnp+recompute", "scan+pallas+recompute", "scan+jnp+randk"]
+            "scan+jnp+recompute", "scan+pallas+recompute",
+            "scan+jnp+randk", "vmap+pallas+randk", "vmap+pallas+qsgd",
+            "scan+pallas+recompute+qsgd"]
     if 8 % max(jax.device_count(), 1) == 0:
         # run() skips the shard section when n doesn't divide the devices
         tags += ["shard+jnp", "shard+pallas", "shard+jnp+randk",
-                 "shard+pallas+randk"]
+                 "shard+pallas+randk", "shard+pallas+qsgd"]
     for tag in tags:
         assert tag in res["combos"], tag
         assert COMBO_KEYS <= set(res["combos"][tag]), tag
@@ -230,7 +257,7 @@ def smoke():
         assert {"cache_groups", "cache_bytes"} <= set(res["combos"][f"scan+{be}"])
         assert (res["combos"][f"scan+{be}"]["local_update_evals"]
                 < res["combos"][f"scan+{be}+recompute"]["local_update_evals"])
-    print("round_engine bench smoke OK (schema 4)")
+    print("round_engine bench smoke OK (schema 5)")
 
 
 if __name__ == "__main__":

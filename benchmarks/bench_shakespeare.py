@@ -8,7 +8,6 @@ import json
 import os
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

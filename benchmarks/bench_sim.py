@@ -31,8 +31,9 @@ correctness proxy, like the interpret-mode pallas combos.
 Artifact: ``benchmarks/artifacts/sim.json`` (schema 2, field contract in
 docs/benchmarks.md; schema 1 lacked the ``*+shard`` modes and
 ``workload.mesh_axis_size``).  ``--smoke`` runs the reduced scenario and
-asserts the artifact contract without timing gates (the CI ``sim-smoke``
-step).
+asserts the artifact contract without timing gates (part of the CI
+``bench-regression`` job, which also diffs the fresh artifact against the
+committed baseline via tools/check_bench.py).
 """
 
 from __future__ import annotations
@@ -50,7 +51,7 @@ ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
 SCHEMA = 2
 
-# keys every per-mode entry must carry (checked by smoke() / the CI sim-smoke step)
+# keys every per-mode entry must carry (checked by smoke() / tools/check_bench.py)
 MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s", "sent_total"}
 
 

@@ -9,11 +9,9 @@ import math
 import os
 import time
 
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import csv_line, run_method
-from repro.data import eval_split, femnist_like
+from repro.data import femnist_like
 from repro.models.simple import mlp_classifier
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")

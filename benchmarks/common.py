@@ -5,8 +5,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.fl.trainer import run_training

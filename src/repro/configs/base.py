@@ -9,7 +9,7 @@ the brief (<=2 layers, d_model<=512, <=4 experts).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -8,14 +8,40 @@ them into the round: each sampled client transmits ``C(U_i)`` instead of
 probabilities are computed from the norms of the *compressed* updates (what
 is actually sent — still one float per client).
 
-* ``rand_k``  — random-k sparsification: keep k coordinates uniformly,
-  scale by d/k.  Uplink cost ~ k * (value + index) bits.
+* ``rand_k``  — random-k sparsification: keep exactly k coordinates, scale
+  each kept coordinate by its stratum size so ``E[C(x)] = x``.  Uplink cost
+  ~ k * (value + index) bits.
 * ``qsgd``    — QSGD stochastic quantization (Alistarh et al. 2017) with s
   levels: transmit per-leaf norm + signs + integer levels
   (~ d * (log2(s+1) + 1) bits + one float).
 * ``natural`` — natural compression (Horváth et al. 2019): unbiased
   stochastic rounding of each magnitude to one of its two neighbouring
   powers of two, so only sign + exponent travel (9 bits per coordinate).
+
+Material / apply split
+----------------------
+Every compressor factors into two stages so the heavy lifting can run
+*inside* the fused aggregate tile stream (kernels/norm_aggregate.py,
+kernels/sharded_aggregate.py):
+
+1. :func:`compression_material` — all PRNG draws (and, for qsgd, the
+   per-leaf norms), keyed by the per-client subkey contract
+   (``jax.random.split(key, len(leaves))`` per leaf, exactly the split
+   :func:`compress_update` always made).  The result is a tuple of pytrees
+   shaped like the update — precomputed per-tile key material a kernel can
+   stream alongside the raw values.
+2. :func:`apply_compression_flat` — a pure elementwise map
+   ``(raw values, material...) -> compressed values`` with NO randomness and
+   no cross-coordinate reductions, so it evaluates identically on a whole
+   matrix (the jnp oracle path) or on one ``(clients, chunk)`` VMEM tile
+   (inside a Pallas kernel body).  Identical inputs give bitwise-identical
+   compressed values on every round path — the property the cross-engine
+   mask-parity tests gate.
+
+``compress_update`` (material + apply in one call) remains the reference
+single-client API; zero-valued inputs with zero material compress to exact
+zero for every kind, which is what makes the kernels' zero-padding of both
+tile axes safe.
 """
 
 from __future__ import annotations
@@ -31,23 +57,153 @@ import jax.numpy as jnp
 # fl.compression fails at engine construction, not at trace time.
 COMPRESSORS = ("none", "randk", "qsgd", "natural")
 
+# how many material pytrees compression_material returns per kind — kernels
+# use this to size their variadic material operands.
+MATERIAL_ARITY = {"none": 0, "randk": 1, "qsgd": 2, "natural": 1}
+
+
+def _rand_k_gain(key: jax.Array, d: int, frac: float) -> jax.Array:
+    """``(d,)`` f32 rand-k gains: stratified exact-k selection.
+
+    Coordinates are laid out row-major on a ``(B+1, k)`` grid
+    (``B = d // k``); column ``c`` is the stratum ``{c, c+k, c+2k, ...}``.
+    One uniform 32-bit draw per cell (invalid cells — index >= d — masked to
+    the max), the argmin of each column is the kept coordinate, and its gain
+    is the stratum size (``B+1`` for the first ``d % k`` columns, else
+    ``B``), so exactly k coordinates survive and ``E[gain_i] = 1`` for every
+    coordinate (unbiased).  Sort-free and O(d) — random bits are generated
+    directly in grid layout (the flat row-major view IS coordinate order),
+    which is what keeps this orders of magnitude cheaper than the
+    permutation-based selection it replaced.
+    """
+    k = max(1, min(d, int(d * frac)))
+    b, r = d // k, d % k
+    rows = jnp.arange(b + 1, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(k, dtype=jnp.int32)[None, :]
+    valid = rows * k + cols < d
+    sizes = jnp.where(jnp.arange(k) < r, float(b + 1), float(b)).astype(jnp.float32)
+    bits = jax.random.bits(key, (b + 1, k), jnp.uint32)
+    g = jnp.where(valid, bits, jnp.uint32(0xFFFFFFFF))
+    col_min = jnp.min(g, axis=0)
+    eq = g == col_min[None, :]
+    keep = eq & (jnp.cumsum(eq.astype(jnp.int32), axis=0) == 1)  # first hit
+    return (keep.astype(jnp.float32) * sizes[None, :]).reshape((b + 1) * k)[:d]
+
+
+def apply_compression_flat(x: jax.Array, kind: str, param: float,
+                           *mats: jax.Array) -> jax.Array:
+    """Elementwise compressed values from raw values + precomputed material.
+
+    ``x`` and every entry of ``mats`` share one shape (a leaf, a ``(n, D)``
+    client-major matrix, or one ``(clients, chunk)`` kernel tile — the map is
+    shape-agnostic and purely elementwise, so it runs unchanged inside a
+    Pallas kernel body).  Returns f32; callers cast back to the transport
+    dtype.  Zero values with zero material map to exact zero for every kind
+    (the padding-safety contract of the fused kernels).
+    """
+    xf = x.astype(jnp.float32)
+    if kind in (None, "none"):
+        return xf
+    if kind == "randk":
+        (gain,) = mats
+        return xf * gain
+    if kind == "qsgd":
+        u, nrm = mats
+        levels = int(param)
+        scaled = jnp.where(
+            nrm > 0, jnp.abs(xf) / jnp.maximum(nrm, 1e-30) * levels, 0.0
+        )
+        low = jnp.floor(scaled)
+        q = low + (u < scaled - low)
+        return jnp.sign(xf) * q * nrm / levels
+    if kind == "natural":
+        (u,) = mats
+        mag = jnp.abs(xf)
+        tiny = jnp.float32(2.0 ** -126)
+        sub = mag < tiny
+        low = jnp.where(
+            sub, 0.0, jnp.exp2(jnp.floor(jnp.log2(jnp.maximum(mag, tiny))))
+        )
+        hi = jnp.where(sub, tiny, 2.0 * low)
+        prob = jnp.where(sub, mag / tiny, mag / jnp.maximum(low, tiny) - 1.0)
+        return jnp.sign(xf) * jnp.where(u < prob, hi, low)
+    raise ValueError(f"unknown compressor {kind!r}; want one of {COMPRESSORS}")
+
+
+def compression_material(update: Any, key: jax.Array, kind: str,
+                         param: float) -> tuple:
+    """All value-independent* compression randomness for ONE client's update.
+
+    Returns a tuple of ``MATERIAL_ARITY[kind]`` pytrees, each with the
+    update's structure and leaf shapes (f32): rand-k — the stratified
+    selection gains; qsgd — the per-coordinate uniforms plus the per-leaf
+    norm broadcast to every coordinate (*the one value-dependent piece: qsgd
+    quantizes relative to ``||leaf||``); natural — the rounding uniforms.
+
+    The key splits per leaf exactly as :func:`compress_update` always did
+    (``jax.random.split(key, len(leaves))``), and the uniform fields draw in
+    flattened shape — so material + :func:`apply_compression_flat` is
+    bitwise-identical to the per-leaf reference operators.
+    """
+    if kind in (None, "none"):
+        return ()
+    leaves, treedef = jax.tree_util.tree_flatten(update)
+    keys = jax.random.split(key, len(leaves))
+    unflatten = jax.tree_util.tree_unflatten
+    if kind == "randk":
+        gains = [
+            _rand_k_gain(k, leaf.size, param).reshape(leaf.shape)
+            for leaf, k in zip(leaves, keys)
+        ]
+        return (unflatten(treedef, gains),)
+    if kind == "qsgd":
+        us, norms = [], []
+        for leaf, k in zip(leaves, keys):
+            us.append(jax.random.uniform(k, (leaf.size,)).reshape(leaf.shape))
+            nrm = jnp.linalg.norm(leaf.reshape(-1).astype(jnp.float32))
+            norms.append(jnp.full(leaf.shape, nrm, jnp.float32))
+        return (unflatten(treedef, us), unflatten(treedef, norms))
+    if kind == "natural":
+        us = [
+            jax.random.uniform(k, (leaf.size,)).reshape(leaf.shape)
+            for leaf, k in zip(leaves, keys)
+        ]
+        return (unflatten(treedef, us),)
+    raise ValueError(f"unknown compressor {kind!r}; want one of {COMPRESSORS}")
+
+
+def apply_compression(update: Any, mats: tuple, kind: str, param: float) -> Any:
+    """Compressed update tree from raw tree + material, cast to leaf dtypes.
+
+    Pure elementwise tree-map over :func:`apply_compression_flat` — works
+    with or without leading client axes (material leaves must match the
+    update leaves' shapes, which :func:`compression_material` under
+    ``jax.vmap`` guarantees).
+    """
+    if kind in (None, "none"):
+        return update
+    leaves, treedef = jax.tree_util.tree_flatten(update)
+    mat_leaves = [jax.tree_util.tree_leaves(m) for m in mats]
+    out = [
+        apply_compression_flat(leaf, kind, param, *ms).astype(leaf.dtype)
+        for leaf, *ms in zip(leaves, *mat_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
 
 def rand_k_leaf(x: jax.Array, frac: float, key: jax.Array) -> jax.Array:
-    flat = x.reshape(-1)
-    d = flat.shape[0]
-    k = max(1, int(d * frac))
-    mask = jax.random.permutation(key, d) < k
-    return (jnp.where(mask, flat, 0.0) * (d / k)).reshape(x.shape).astype(x.dtype)
+    """Exact-k random sparsification of one leaf (stratified, unbiased)."""
+    gain = _rand_k_gain(key, x.size, frac).reshape(x.shape)
+    return apply_compression_flat(x, "randk", frac, gain).astype(x.dtype)
 
 
 def qsgd_leaf(x: jax.Array, levels: int, key: jax.Array) -> jax.Array:
-    flat = x.reshape(-1).astype(jnp.float32)
-    norm = jnp.linalg.norm(flat)
-    scaled = jnp.where(norm > 0, jnp.abs(flat) / jnp.maximum(norm, 1e-30) * levels, 0.0)
-    low = jnp.floor(scaled)
-    prob = scaled - low
-    q = low + (jax.random.uniform(key, flat.shape) < prob)
-    out = jnp.sign(flat) * q * norm / levels
+    """QSGD stochastic quantization of one leaf to ``levels`` levels."""
+    flat = x.reshape(-1)
+    u = jax.random.uniform(key, flat.shape)
+    nrm = jnp.full(flat.shape, jnp.linalg.norm(flat.astype(jnp.float32)),
+                   jnp.float32)
+    out = apply_compression_flat(flat, "qsgd", levels, u, nrm)
     return out.reshape(x.shape).astype(x.dtype)
 
 
@@ -63,15 +219,9 @@ def natural_leaf(x: jax.Array, key: jax.Array) -> jax.Array:
     emitted.  On backends that flush subnormals (XLA CPU), such inputs read
     as 0 and compress to exact 0 — the scheme's floor, not a bias blow-up.
     """
-    flat = x.reshape(-1).astype(jnp.float32)
-    mag = jnp.abs(flat)
-    tiny = jnp.float32(2.0 ** -126)
-    sub = mag < tiny
-    low = jnp.where(sub, 0.0, jnp.exp2(jnp.floor(jnp.log2(jnp.maximum(mag, tiny)))))
-    hi = jnp.where(sub, tiny, 2.0 * low)
-    prob = jnp.where(sub, mag / tiny, mag / jnp.maximum(low, tiny) - 1.0)
-    up = jax.random.uniform(key, flat.shape) < prob
-    out = jnp.sign(flat) * jnp.where(up, hi, low)
+    flat = x.reshape(-1)
+    u = jax.random.uniform(key, flat.shape)
+    out = apply_compression_flat(flat, "natural", 0.0, u)
     return out.reshape(x.shape).astype(x.dtype)
 
 
@@ -79,17 +229,8 @@ def compress_update(update: Any, key: jax.Array, kind: str, param: float) -> Any
     """Apply an unbiased compressor leaf-wise to one client's update tree."""
     if kind in (None, "none"):
         return update
-    leaves, treedef = jax.tree_util.tree_flatten(update)
-    keys = jax.random.split(key, len(leaves))
-    if kind == "randk":
-        out = [rand_k_leaf(l, param, k) for l, k in zip(leaves, keys)]
-    elif kind == "qsgd":
-        out = [qsgd_leaf(l, int(param), k) for l, k in zip(leaves, keys)]
-    elif kind == "natural":
-        out = [natural_leaf(l, k) for l, k in zip(leaves, keys)]
-    else:
-        raise ValueError(f"unknown compressor {kind!r}; want one of {COMPRESSORS}")
-    return jax.tree_util.tree_unflatten(treedef, out)
+    mats = compression_material(update, key, kind, param)
+    return apply_compression(update, mats, kind, param)
 
 
 def compressed_bits_per_update(dim: int, kind: str, param: float) -> int:
@@ -97,7 +238,7 @@ def compressed_bits_per_update(dim: int, kind: str, param: float) -> int:
     if kind in (None, "none"):
         return dim * 32
     if kind == "randk":
-        k = max(1, int(dim * param))
+        k = max(1, min(dim, int(dim * param)))
         return k * (32 + max(1, math.ceil(math.log2(max(dim, 2)))))
     if kind == "qsgd":
         s = int(param)

@@ -78,6 +78,31 @@ class RoundMetrics(NamedTuple):
     mask: jax.Array
 
 
+def client_compression_material(updates: Any, keys: jax.Array, fl: FLConfig):
+    """Per-client compression material for a block of client updates.
+
+    ``jax.vmap`` of ``core.compression.compression_material`` over the block:
+    ``keys`` is the matching ``(block, 2)`` slice of
+    ``jax.random.split(k_comp, n_clients)`` — the per-client subkey contract
+    every round path shares.  Returns the tuple of material pytrees (leaves
+    gain the leading client axis); only call with ``fl.compression != 'none'``.
+    """
+    from repro.core.compression import compression_material
+
+    return jax.vmap(
+        lambda u, k: compression_material(u, k, fl.compression,
+                                          fl.compression_param)
+    )(updates, keys)
+
+
+def client_apply_compression(updates: Any, mats: tuple, fl: FLConfig) -> Any:
+    """Compressed client block from raw updates + material (elementwise)."""
+    from repro.core.compression import apply_compression
+
+    return apply_compression(updates, mats, fl.compression,
+                             fl.compression_param)
+
+
 def compress_client_updates(updates: Any, keys: jax.Array, fl: FLConfig) -> Any:
     """Compress a block of client updates with per-client keys (no-op when
     ``fl.compression == 'none'``).
@@ -87,15 +112,15 @@ def compress_client_updates(updates: Any, keys: jax.Array, fl: FLConfig) -> Any:
     ``jax.random.split(k_comp, n_clients)``.  The single-device engines pass
     each group's slice; the shard_map body passes its shard's slice of the
     same key array — which is what makes compressed updates (hence norms,
-    hence masks) bitwise identical across every path.
+    hence masks) bitwise identical across every path.  Implemented as
+    material + elementwise apply (:func:`client_compression_material` /
+    :func:`client_apply_compression`) — the same two stages the fused
+    kernels consume, so the materialised and in-stream forms cannot diverge.
     """
     if fl.compression == "none":
         return updates
-    from repro.core.compression import compress_update
-
-    return jax.vmap(
-        lambda u, k: compress_update(u, k, fl.compression, fl.compression_param)
-    )(updates, keys)
+    mats = client_compression_material(updates, keys, fl)
+    return client_apply_compression(updates, mats, fl)
 
 
 def make_local_update(loss_fn: Callable, fl: FLConfig):
@@ -288,22 +313,54 @@ class RoundEngine:
         return self._make_vmap_step() if self.memory == "vmap" else self._make_scan_step()
 
     def _make_vmap_step(self):
+        from repro.kernels import ops as kops
+
+        fl = self.fl
+
         def round_step(params, opt_state, batch, weights, key):
             k_sample, k_comp = jax.random.split(key)
             updates, losses = jax.vmap(self._local_update, in_axes=(None, 0))(
                 params, batch
             )
-            # paper future-work: unbiased compression composed with OCS —
-            # each client compresses BEFORE norms/sampling (it reports the
-            # norm of what it would actually send).
-            updates = self._compress_group(
-                updates, jax.random.split(k_comp, weights.shape[0])
-            )
-            u = ocs.client_norms(updates, weights)
-            plan = self._plan(u, weights, k_sample)
-            aggregate = ocs.aggregate_updates(
-                updates, plan.scale, backend=self.backend, interpret=self.interpret
-            )
+            if fl.compression == "none":
+                u = ocs.client_norms(updates, weights)
+                plan = self._plan(u, weights, k_sample)
+                aggregate = ocs.aggregate_updates(
+                    updates, plan.scale, backend=self.backend,
+                    interpret=self.interpret,
+                )
+            else:
+                # paper future-work: unbiased compression composed with OCS —
+                # each client compresses BEFORE norms/sampling (it reports
+                # the norm of what it would actually send).  The plan's norms
+                # always come from the shared jnp path on the compressed
+                # values (bitwise identical across engines); with the pallas
+                # backend the post-plan aggregate re-applies the compressor
+                # INSIDE the fused tile stream from the raw updates + the
+                # same material, so no compressed (n, D) matrix is ever
+                # written for the contraction.
+                comp_keys = jax.random.split(k_comp, weights.shape[0])
+                mats = client_compression_material(updates, comp_keys, fl)
+                compressed = client_apply_compression(updates, mats, fl)
+                u = ocs.client_norms(compressed, weights)
+                plan = self._plan(u, weights, k_sample)
+                if self.backend == "pallas":
+                    flat = kops.tree_to_client_matrix(updates)
+                    mat_flats = tuple(
+                        kops.tree_to_client_matrix(m) for m in mats
+                    )
+                    _, agg_flat = kops.compress_norm_scale_aggregate(
+                        flat, plan.scale, mat_flats, fl.compression,
+                        fl.compression_param, interpret=self.interpret,
+                    )
+                    aggregate = kops.client_matrix_to_tree(
+                        agg_flat, params, strip_client_axis=False
+                    )
+                else:
+                    aggregate = ocs.aggregate_updates(
+                        compressed, plan.scale, backend="jnp",
+                        interpret=self.interpret,
+                    )
             new_params, new_opt = self._apply_server(params, opt_state, aggregate)
             return new_params, new_opt, self._metrics(plan, losses)
 
@@ -403,11 +460,26 @@ class RoundEngine:
                 return acc + part, None
 
             def spill_agg(acc, inp):
+                # spill-to-recompute with compression fused: recompute the
+                # RAW updates, regenerate the material from the same
+                # per-client subkeys as pass 1, and let the compressor run
+                # inside the post-plan tile stream — the compressed flat the
+                # cache would have held is never materialised on this path.
                 gb, sc, kg = inp
-                upd, _ = group_updates(gb, kg)
+                upd, _ = jax.vmap(self._local_update, in_axes=(None, 0))(
+                    params, gb
+                )
                 flat = kops.tree_to_client_matrix(upd)
-                _, part = update_cache.group_norm_aggregate(
-                    flat, sc, self.backend, self.interpret
+                if fl.compression == "none":
+                    mat_flats = ()
+                else:
+                    mats = client_compression_material(upd, kg, fl)
+                    mat_flats = tuple(
+                        kops.tree_to_client_matrix(m) for m in mats
+                    )
+                _, part = update_cache.group_compress_norm_aggregate(
+                    flat, sc, mat_flats, fl.compression, fl.compression_param,
+                    self.backend, self.interpret,
                 )
                 return acc + part, None
 

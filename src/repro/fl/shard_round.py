@@ -21,12 +21,16 @@ un-sharded inside the shard_map body (suitable for the small/medium models
 the paper trains; the GSPMD path is the one that scales to the 777B configs).
 
 Unbiased compression (paper Sec. 1.2: "orthogonal and compatible" with OCS)
-runs INSIDE the shard body: each shard compresses its local client block
-with ``fl.engine.compress_client_updates`` before taking norms, using its
-slice of the same ``jax.random.split(k_comp, n)`` per-client subkeys the
-single-device engines derive — each client reports the norm of what it
-actually sends, and the compressed-update norms (hence the masks, hence the
-``round_bits`` bill) are bitwise identical to the vmap/scan engines.
+runs INSIDE the shard body: each shard derives compression material for its
+local client block with ``fl.engine.client_compression_material`` before
+taking norms, using its slice of the same ``jax.random.split(k_comp, n)``
+per-client subkeys the single-device engines derive — each client reports
+the norm of what it actually sends, and the compressed-update norms (hence
+the masks, hence the ``round_bits`` bill) are bitwise identical to the
+vmap/scan engines.  On the pallas backend the *apply* step then fuses into
+the aggregate tile stream (``sharded_compress_aggregate_pallas``): the raw
+block and its material are read once and ``C(U)`` never materialises as an
+``(k, D)`` intermediate.
 
 The final aggregate honours ``fl.agg_backend`` — the same jnp | pallas axis
 as :class:`repro.fl.engine.RoundEngine`:
@@ -44,8 +48,6 @@ as :class:`repro.fl.engine.RoundEngine`:
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -53,7 +55,10 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import FLConfig
 from repro.core import ocs
 from repro.fl.round import RoundMetrics, make_local_update
-from repro.fl.engine import compress_client_updates
+from repro.fl.engine import (
+    client_apply_compression,
+    client_compression_material,
+)
 from repro.kernels import ops as kops
 
 
@@ -97,7 +102,7 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
     scalar norms and weights and calls ``ocs.sampling_plan`` — the same single
     copy of probabilities/mask/scale (incl. Appendix E availability) every
     single-device path uses.  Compression likewise reuses the engines'
-    ``compress_client_updates`` on the shard's local block with the identical
+    material/apply helpers on the shard's local block with the identical
     per-client subkey slice, which is what keeps masks bitwise identical
     across the mesh boundary.  The config is validated up front
     (:func:`validate_shard_config`) so a rejected config never consumes any
@@ -125,14 +130,19 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
         # paper Sec. 1.2 / Sec. 6: each client compresses BEFORE reporting
         # its norm (it reports the norm of what it actually sends).  The key
         # array is the engines' exact per-client split; each shard uses only
-        # its own slice.
+        # its own slice.  Material and applied values are split so the pallas
+        # path below can fuse the apply into the aggregate tile stream.
         if fl.compression != "none":
             comp_keys = jax.random.split(k_comp, fl.n_clients)
-            updates = compress_client_updates(updates, sl(comp_keys), fl)
+            mats = client_compression_material(updates, sl(comp_keys), fl)
+            compressed = client_apply_compression(updates, mats, fl)
+        else:
+            mats = ()
+            compressed = updates
 
         # local client norms (one float per owned client) — the same
         # ocs.client_norms reduction, in the same leaf order, as the engines.
-        u_local = ocs.client_norms(updates, weights)
+        u_local = ocs.client_norms(compressed, weights)
 
         # Algorithm 2's aggregation: the master only ever sees sums/gathers of
         # scalars — here an all_gather of one float per client (norms and
@@ -146,10 +156,18 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
         scale = sl(plan.scale)
 
         # client -> master (Eq. 2): the cross-shard sum of scaled updates.
-        if fl.agg_backend == "pallas":
+        if fl.agg_backend == "pallas" and fl.compression != "none":
+            # in-stream compression: the RAW local block + its material stream
+            # through the fused per-shard kernel (one HBM read of the block,
+            # no C(U) intermediate) + ONE psum of the (D,) partial.
+            aggregate = kops.tree_shard_compress_aggregate(
+                updates, scale, mats, fl.compression, fl.compression_param,
+                axis_name=client_axis, interpret=interpret,
+            )
+        elif fl.agg_backend == "pallas":
             # fused per-shard kernel over the local (k, D) block + ONE psum.
             aggregate = kops.tree_shard_masked_aggregate(
-                updates, scale, axis_name=client_axis, interpret=interpret,
+                compressed, scale, axis_name=client_axis, interpret=interpret,
             )
         else:
             # portable baseline: per-leaf contraction, psum per leaf.
@@ -159,7 +177,7 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
                     jnp.sum(leaf.astype(jnp.float32) * s, axis=0), client_axis
                 )
 
-            aggregate = jax.tree_util.tree_map(agg, updates)
+            aggregate = jax.tree_util.tree_map(agg, compressed)
         new_params = jax.tree_util.tree_map(
             lambda pp, gg: (pp - fl.lr_global * gg).astype(pp.dtype), params, aggregate
         )

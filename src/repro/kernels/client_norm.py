@@ -15,8 +15,6 @@ the accumulation stays in VMEM.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

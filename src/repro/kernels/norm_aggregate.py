@@ -24,6 +24,15 @@ squared-norm accumulator map to the same block every step (both stay resident
 in VMEM); updates stream as ``(C, CHUNK)`` tiles; the aggregate output block
 ``(CHUNK,)`` at chunk ``i`` is touched by exactly one grid step, so only the
 norm output needs cross-step accumulation.
+
+In-stream compression (``compress_norm_scale_aggregate_pallas``): the same
+tile stream additionally applies the unbiased compressor — the pure
+elementwise ``core.compression.apply_compression_flat`` map over the tile and
+its precomputed per-tile key material (the per-client-subkey PRNG draws,
+streamed as extra ``(C, CHUNK)`` operands) — BEFORE the two reductions, so
+the compressed update ``C(U_i)`` never materialises in HBM at all: one read
+of the raw update (plus its material) replaces the old
+compress-write / norm-read / aggregate-read triple pass.
 """
 
 from __future__ import annotations
@@ -31,6 +40,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.compression import MATERIAL_ARITY, apply_compression_flat
 
 
 def _norm_agg_kernel(s_ref, x_ref, sq_ref, o_ref):
@@ -78,3 +89,79 @@ def norm_scale_aggregate_pallas(
         ],
         interpret=interpret,
     )(scale, updates)
+
+
+def _make_compress_norm_agg_kernel(kind: str, param: float, n_mats: int,
+                                   in_dtype):
+    """Kernel body closure: compress the tile in-stream, then both reductions.
+
+    ``kind``/``param``/``n_mats`` are static per pallas_call; the compressed
+    tile is cast through the transport dtype (``in_dtype``) so its values are
+    bitwise what the jnp path materialises before its own f32 reductions.
+    """
+
+    def kernel(*refs):
+        s_ref, x_ref = refs[0], refs[1]
+        mat_refs = refs[2:2 + n_mats]
+        sq_ref, o_ref = refs[2 + n_mats], refs[3 + n_mats]
+        step = pl.program_id(0)
+
+        @pl.when(step == 0)
+        def _init():
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+        x = x_ref[...].astype(jnp.float32)
+        xc = apply_compression_flat(x, kind, param, *[m[...] for m in mat_refs])
+        xc = xc.astype(in_dtype).astype(jnp.float32)
+        sq_ref[...] += jnp.sum(xc * xc, axis=-1)
+        o_ref[...] = jax.lax.dot_general(
+            s_ref[...].astype(jnp.float32), xc, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    return kernel
+
+
+def compress_norm_scale_aggregate_pallas(
+    updates: jax.Array, scale: jax.Array, mats: tuple, kind: str, param: float,
+    chunk: int = 4096, interpret: bool = False,
+):
+    """updates (clients, D) + material -> ((clients,) sq norms of C(U),
+    (D,) aggregate of C(U)) — compression fused into the same tile stream.
+
+    ``mats`` is the tuple of ``(clients, D)`` f32 material matrices
+    (``core.compression.compression_material`` flattened client-major, one
+    per ``MATERIAL_ARITY[kind]``); each streams tile-for-tile alongside the
+    raw updates, the elementwise compressor runs in VMEM, and both OCS
+    reductions consume the compressed tile — one HBM read of each update, no
+    compressed intermediate.  ``kind='none'`` degenerates to
+    :func:`norm_scale_aggregate_pallas` exactly.  D is padded to a ``chunk``
+    multiple by the wrapper in ops.py (zero values + zero material compress
+    to zero for every kind, so padding changes neither output).
+    """
+    c, d = updates.shape
+    assert scale.shape == (c,), (scale.shape, c)
+    assert d % chunk == 0, (d, chunk)
+    assert len(mats) == MATERIAL_ARITY[kind], (kind, len(mats))
+    for m in mats:
+        assert m.shape == (c, d), (m.shape, (c, d))
+    grid = (d // chunk,)
+    kernel = _make_compress_norm_agg_kernel(kind, param, len(mats),
+                                            updates.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c, chunk), lambda i: (0, i)),
+        ] + [pl.BlockSpec((c, chunk), lambda i: (0, i)) for _ in mats],
+        out_specs=[
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scale, updates, *mats)

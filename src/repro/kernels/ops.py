@@ -28,8 +28,14 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.client_norm import client_sqnorms_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.masked_aggregate import masked_scale_aggregate_pallas
-from repro.kernels.norm_aggregate import norm_scale_aggregate_pallas
-from repro.kernels.sharded_aggregate import sharded_masked_aggregate_pallas
+from repro.kernels.norm_aggregate import (
+    compress_norm_scale_aggregate_pallas,
+    norm_scale_aggregate_pallas,
+)
+from repro.kernels.sharded_aggregate import (
+    sharded_compress_aggregate_pallas,
+    sharded_masked_aggregate_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -150,6 +156,37 @@ def norm_scale_aggregate(updates: jax.Array, scale: jax.Array, chunk: int = 4096
     return sq, agg[:d]
 
 
+@partial(jax.jit, static_argnames=("kind", "param", "chunk", "interpret"))
+def compress_norm_scale_aggregate(updates, scale, mats, kind: str, param: float,
+                                  chunk: int = 4096,
+                                  interpret: bool | None = None):
+    """Raw (clients, D) + material -> ((clients,) sq norms of C(U),
+    (D,) aggregate of C(U)) — compression fused into the aggregate stream.
+
+    The in-stream form of compress -> Alg. 1 line 3 -> Eq. 2: the unbiased
+    compressor runs elementwise on each VMEM tile (raw values + the
+    ``MATERIAL_ARITY[kind]`` precomputed ``(clients, D)`` material matrices,
+    streamed tile-for-tile), and both OCS reductions consume the compressed
+    tile — one HBM read of each update, no ``C(U)`` intermediate ever
+    written.  Padding follows the house convention: D pads to a ``chunk``
+    multiple with zeros on updates AND material (zero in, zero out for every
+    compressor kind), outputs are unpadded on return.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    c, d = updates.shape
+    chunk = min(chunk, max(d, 1))
+    pad = (-d) % chunk
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+        mats = tuple(jnp.pad(m, ((0, 0), (0, pad))) for m in mats)
+    sq, agg = compress_norm_scale_aggregate_pallas(
+        updates, scale, tuple(mats), kind, param, chunk=chunk,
+        interpret=interpret,
+    )
+    return sq, agg[:d]
+
+
 def tree_masked_aggregate(updates_tree, scale, chunk: int = 4096, interpret=None):
     """Kernel-backed masked aggregate over a pytree of (n, ...) leaves.
 
@@ -220,6 +257,70 @@ def tree_shard_masked_aggregate(updates_tree, scale, axis_name: str | None = Non
     flat = tree_to_client_matrix(updates_tree)
     agg = shard_masked_aggregate(
         flat, scale, axis_name=axis_name, chunk=chunk,
+        block_clients=block_clients, interpret=interpret,
+    )
+    return client_matrix_to_tree(agg, updates_tree, strip_client_axis=True,
+                                 keep_dtype=True)
+
+
+def shard_compress_aggregate(updates, scale, mats, kind: str, param: float,
+                             axis_name: str | None = None, chunk: int = 4096,
+                             block_clients: int = 128,
+                             interpret: bool | None = None):
+    """Shard-local RAW ``(k, D)`` block + material -> ``((k,) sq norms of
+    C(U), fully-summed (D,) f32 aggregate of C(U))``, compression fused.
+
+    The mesh-native form of compress -> Eq. 2, meant to be called INSIDE a
+    ``shard_map`` body: the fused kernel compresses each tile in-stream
+    (kernels/sharded_aggregate.py) and contracts the local partial, then one
+    ``jax.lax.psum`` over ``axis_name`` completes the estimator across
+    shards — still "scalars up, one partial sum per shard", now with no
+    compressed intermediate anywhere.  ``axis_name=None`` skips the psum
+    (single-shard / testing use).  Pads D to a ``chunk`` multiple and the
+    local client count to ``block_clients`` with zeros on updates, scale AND
+    material (zero rows/columns contribute to neither output).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    c, d = updates.shape
+    chunk = min(chunk, max(d, 1))
+    block_clients = min(block_clients, max(c, 1))
+    pad_d = (-d) % chunk
+    pad_c = (-c) % block_clients
+    if pad_d or pad_c:
+        updates = jnp.pad(updates, ((0, pad_c), (0, pad_d)))
+        scale = jnp.pad(scale, (0, pad_c))
+        mats = tuple(jnp.pad(m, ((0, pad_c), (0, pad_d))) for m in mats)
+    sq, out = sharded_compress_aggregate_pallas(
+        updates, scale, tuple(mats), kind, param, chunk=chunk,
+        block_clients=block_clients, interpret=interpret,
+    )
+    sq, out = sq[:c], out[:d]
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return sq, out
+
+
+def tree_shard_compress_aggregate(updates_tree, scale, mats, kind: str,
+                                  param: float, axis_name: str | None = None,
+                                  chunk: int = 4096, block_clients: int = 128,
+                                  interpret=None):
+    """Fused compress+Eq. 2 over a shard-local pytree of RAW ``(k, ...)``
+    leaves, inside shard_map.
+
+    Concatenates the local block and each material pytree into their
+    client-major ``(k, D)`` matrices (per-shard copies, never a replicated
+    ``(n, D)`` flatten), streams them through the fused per-shard kernel
+    (compression applied in-tile), psums once over ``axis_name``, and splits
+    the aggregated ``(D,)`` row back to the leaf shapes (cast to each leaf's
+    dtype).  The squared norms the stream re-emits are discarded here — the
+    plan's norms come from the shared jnp path, which is what keeps masks
+    bitwise identical across engines.
+    """
+    flat = tree_to_client_matrix(updates_tree)
+    mat_flats = tuple(tree_to_client_matrix(m) for m in mats)
+    _, agg = shard_compress_aggregate(
+        flat, scale, mat_flats, kind, param, axis_name=axis_name, chunk=chunk,
         block_clients=block_clients, interpret=interpret,
     )
     return client_matrix_to_tree(agg, updates_tree, strip_client_axis=True,

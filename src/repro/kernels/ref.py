@@ -22,6 +22,20 @@ def norm_scale_aggregate_ref(updates, scale):
     return client_sqnorms_ref(updates), masked_scale_aggregate_ref(updates, scale)
 
 
+def compress_norm_scale_aggregate_ref(updates, scale, mats, kind, param):
+    """Oracle of the fused compress+norm+aggregate stream: compress the raw
+    ``(clients, D)`` matrix with its material (the same elementwise
+    ``apply_compression_flat`` map the kernels run per tile, cast through the
+    transport dtype), then both reductions on ``C(U)``."""
+    from repro.core.compression import apply_compression_flat
+
+    xc = apply_compression_flat(
+        updates, kind, param, *[m.astype(jnp.float32) for m in mats]
+    )
+    xc = xc.astype(updates.dtype).astype(jnp.float32)
+    return client_sqnorms_ref(xc), masked_scale_aggregate_ref(xc, scale)
+
+
 def flash_attention_ref(q, k, v, *, window=None, prefix=0):
     """(BH, S, d) causal attention with optional sliding window / prefix."""
     bh, s, d = q.shape

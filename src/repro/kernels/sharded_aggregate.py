@@ -12,10 +12,14 @@ Nothing ever materialises the replicated ``(n, D)`` matrix that the
 single-device path's ``ops.tree_masked_aggregate`` concatenates — the only
 client-major buffer is the shard-local block that already lives on the shard.
 The kernel is agnostic to what the rows hold: the shard_map round feeds it
-raw updates or their compressed form ``C(U_i)`` (fl.compression, applied
-upstream in the shard body) identically — Eq. 2's contraction is the same
-either way, which is what keeps OCS "orthogonal and compatible" with
-compression on the mesh path.
+raw updates or their compressed form ``C(U_i)`` (fl.compression) identically
+— Eq. 2's contraction is the same either way, which is what keeps OCS
+"orthogonal and compatible" with compression on the mesh path.  Since the
+fused-compression PR the compressed form never materialises at all:
+``sharded_compress_aggregate_pallas`` streams the RAW local block plus its
+precomputed per-tile key material and runs the elementwise compressor inside
+the same tile stream, emitting the shard's Eq. 2 partial AND the squared
+norms of what each client actually sends from one HBM read.
 
 Kernel schedule
 ---------------
@@ -43,6 +47,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.compression import MATERIAL_ARITY, apply_compression_flat
 
 
 def _shard_agg_kernel(s_ref, x_ref, o_ref):
@@ -90,3 +96,93 @@ def sharded_masked_aggregate_pallas(
         out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
         interpret=interpret,
     )(scale, updates)
+
+
+def _make_shard_compress_kernel(kind: str, param: float, n_mats: int,
+                                in_dtype):
+    """Kernel body closure for the fused compress+norm+aggregate shard pass.
+
+    Same 2-D chunk-major schedule as ``_shard_agg_kernel``; the tile is
+    compressed in VMEM (elementwise ``apply_compression_flat`` over the raw
+    tile + its material tiles) before feeding BOTH reductions — the squared
+    norms of ``C(U_i)`` (block indexed by the client-block step ``j``,
+    initialised on the first chunk and accumulated across chunks) and the
+    Eq. 2 partial (indexed by chunk ``i``, accumulated across client blocks).
+    """
+
+    def kernel(*refs):
+        s_ref, x_ref = refs[0], refs[1]
+        mat_refs = refs[2:2 + n_mats]
+        sq_ref, o_ref = refs[2 + n_mats], refs[3 + n_mats]
+        i = pl.program_id(0)  # chunk step (outer grid axis)
+        j = pl.program_id(1)  # client-block step (inner grid axis)
+
+        @pl.when(j == 0)
+        def _init_agg():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        @pl.when(i == 0)
+        def _init_sq():
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+        x = x_ref[...].astype(jnp.float32)
+        xc = apply_compression_flat(x, kind, param, *[m[...] for m in mat_refs])
+        xc = xc.astype(in_dtype).astype(jnp.float32)
+        sq_ref[...] += jnp.sum(xc * xc, axis=-1)
+        o_ref[...] += jax.lax.dot_general(
+            s_ref[...].astype(jnp.float32), xc, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    return kernel
+
+
+def sharded_compress_aggregate_pallas(
+    updates: jax.Array,
+    scale: jax.Array,
+    mats: tuple,
+    kind: str,
+    param: float,
+    chunk: int = 4096,
+    block_clients: int = 128,
+    interpret: bool = False,
+):
+    """Local ``(k, D)`` RAW client block + material -> ``((k,) f32 squared
+    norms of C(U), (D,) f32 partial aggregate of C(U))``, compression fused.
+
+    The shard-local half of Eq. 2 with the compressor run inside the same
+    tile stream: ``partial = sum_i scale_i * C(U_i)`` over the clients this
+    shard owns, plus the squared norms of what each client actually sends —
+    one HBM read of the raw block, no compressed ``(k, D)`` intermediate.
+    Callers ``psum`` the partial over the client mesh axis.  ``mats`` holds
+    the ``MATERIAL_ARITY[kind]`` client-major ``(k, D)`` material matrices;
+    the wrapper in ops.py pads both axes with zeros (zero scale + zero
+    material rows/columns contribute nothing to either output).
+    """
+    c, d = updates.shape
+    assert scale.shape == (c,), (scale.shape, c)
+    assert d % chunk == 0, (d, chunk)
+    assert c % block_clients == 0, (c, block_clients)
+    assert len(mats) == MATERIAL_ARITY[kind], (kind, len(mats))
+    for m in mats:
+        assert m.shape == (c, d), (m.shape, (c, d))
+    grid = (d // chunk, c // block_clients)
+    kernel = _make_shard_compress_kernel(kind, param, len(mats), updates.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_clients,), lambda i, j: (j,)),
+            pl.BlockSpec((block_clients, chunk), lambda i, j: (j, i)),
+        ] + [pl.BlockSpec((block_clients, chunk), lambda i, j: (j, i))
+             for _ in mats],
+        out_specs=[
+            pl.BlockSpec((block_clients,), lambda i, j: (j,)),
+            pl.BlockSpec((chunk,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scale, updates, *mats)

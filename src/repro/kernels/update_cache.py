@@ -91,3 +91,34 @@ def group_norm_aggregate(flat: jax.Array, scale: jax.Array, backend: str,
     x = flat.astype(jnp.float32)
     sq = jnp.sum(x * x, axis=-1)
     return sq, jnp.tensordot(scale.astype(jnp.float32), x, axes=(0, 0))
+
+
+def group_compress_norm_aggregate(flat: jax.Array, scale: jax.Array,
+                                  mats: tuple, kind: str, param: float,
+                                  backend: str, interpret: bool | None = None):
+    """One group's RAW ``(g, D)`` matrix + material + ``(g,)`` scale ->
+    ``((g,) f32 squared norms of C(U), (D,) f32 Eq. 2 aggregate partial)``.
+
+    The spill-to-recompute twin of :func:`group_norm_aggregate`: spilled
+    groups re-derive their raw updates post-plan, and this fuses the
+    compressor into the same contraction — backend='pallas' streams raw tiles
+    + material through the in-stream compress kernel
+    (ops.compress_norm_scale_aggregate, one HBM read, no ``C(U)``
+    intermediate); backend='jnp' is the identical-semantics oracle.  The
+    material is regenerated from the same per-client subkeys as pass 1, so
+    the spilled values are bitwise what the cache would have held.
+    """
+    if kind in (None, "none"):
+        return group_norm_aggregate(flat, scale, backend, interpret)
+    if backend == "pallas":
+        from repro.kernels import ops
+
+        return ops.compress_norm_scale_aggregate(flat, scale, mats, kind,
+                                                 param, interpret=interpret)
+    from repro.core.compression import apply_compression_flat
+
+    xc = apply_compression_flat(flat, kind, param,
+                                *[m.astype(jnp.float32) for m in mats])
+    xc = xc.astype(flat.dtype).astype(jnp.float32)
+    sq = jnp.sum(xc * xc, axis=-1)
+    return sq, jnp.tensordot(scale.astype(jnp.float32), xc, axes=(0, 0))

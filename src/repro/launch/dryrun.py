@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES
 from repro.configs.base import InputShape, ModelConfig
-from repro.fl.round import client_weights, make_round
+from repro.fl.round import make_round
 from repro.launch import roofline as RL
 from repro.launch import sharding as SH
 from repro.launch import specs as SP

@@ -9,9 +9,6 @@ the sharded dimension last where possible (heads*head_dim, d_ff) so the
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -14,17 +14,14 @@ Layer stacks are scanned; the training path wraps each layer in
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import kvcache as KV
-from repro.models import ssm as S
 from repro.models import transformer as T
 from repro.models.layers import causal_mask, decode_mask
 

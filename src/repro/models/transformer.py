@@ -17,8 +17,6 @@ All functions are pure; caches are explicit pytrees (see ``kvcache.py``).
 from __future__ import annotations
 
 import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -30,12 +28,9 @@ from repro.models.layers import (
     apply_attention,
     apply_mlp,
     apply_norm,
-    causal_mask,
-    decode_mask,
     init_attention,
     init_mlp,
     init_norm,
-    sinusoidal_positions,
 )
 
 

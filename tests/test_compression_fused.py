@@ -1,0 +1,185 @@
+"""In-stream compression: the fused compress+norm+aggregate kernels against
+their jnp oracle, the bitwise fused-vs-materialized equivalence that makes the
+one-HBM-read rewrite safe, and the compressor edge cases (randk frac extremes,
+qsgd levels=1, natural denormals / powers of two, zero padding)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (
+    MATERIAL_ARITY,
+    apply_compression_flat,
+    compress_update,
+    compression_material,
+    natural_leaf,
+    qsgd_leaf,
+    rand_k_leaf,
+)
+from repro.kernels import ops, ref
+
+KINDS = [("randk", 0.5), ("qsgd", 8.0), ("natural", 0.0)]
+
+
+def _mats_for(x, key, kind, param):
+    """Per-client material for a (c, d) matrix, stacked to (c, d) per tree —
+    the same vmap-of-``compression_material`` layout fl/engine.py feeds the
+    fused kernels."""
+    keys = jax.random.split(key, x.shape[0])
+    if MATERIAL_ARITY[kind] == 0:
+        return ()
+    out = jax.vmap(lambda u, k: compression_material(u, k, kind, param))(x, keys)
+    return tuple(out)
+
+
+def _rand_matrix(c, d, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(c, d)).astype("float32")).astype(dtype)
+
+
+# --- fused kernel vs oracle ----------------------------------------------
+
+@pytest.mark.parametrize("kind,param", KINDS)
+@pytest.mark.parametrize("c,d,chunk", [(1, 64, 16), (3, 1000, 128), (8, 300, 64)])
+def test_fused_matches_oracle(kind, param, c, d, chunk):
+    """ops.compress_norm_scale_aggregate == the jnp oracle on every kind,
+    including shapes where D does not divide the chunk (zero padding)."""
+    x = _rand_matrix(c, d)
+    scale = jnp.asarray(np.random.default_rng(1).uniform(0, 2, c).astype("f4"))
+    mats = _mats_for(x, jax.random.PRNGKey(7), kind, param)
+    sq, agg = ops.compress_norm_scale_aggregate(x, scale, mats, kind, param,
+                                                chunk=chunk, interpret=True)
+    sq_r, agg_r = ref.compress_norm_scale_aggregate_ref(x, scale, mats, kind, param)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_r), rtol=1e-6,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("kind,param", KINDS)
+def test_fused_equals_materialize_then_aggregate_bitwise(kind, param):
+    """The tentpole's safety property: compressing in-stream is BITWISE the
+    same as materializing C(U) and running the plain norm+aggregate kernel —
+    so fusing can never change a round's numbers, only its memory traffic."""
+    c, d = 4, 513  # deliberately not a multiple of the chunk
+    x = _rand_matrix(c, d, seed=3)
+    scale = jnp.asarray(np.linspace(0.5, 2.0, c).astype("f4"))
+    mats = _mats_for(x, jax.random.PRNGKey(11), kind, param)
+    sq_f, agg_f = ops.compress_norm_scale_aggregate(x, scale, mats, kind, param,
+                                                    chunk=128, interpret=True)
+    xc = apply_compression_flat(x, kind, param,
+                                *[m.astype(jnp.float32) for m in mats])
+    xc = xc.astype(x.dtype)
+    sq_m, agg_m = ops.norm_scale_aggregate(xc, scale, chunk=128, interpret=True)
+    assert np.array_equal(np.asarray(sq_f), np.asarray(sq_m))
+    assert np.array_equal(np.asarray(agg_f), np.asarray(agg_m))
+
+
+@pytest.mark.parametrize("kind,param", KINDS)
+@pytest.mark.parametrize("c", [1, 3, 8])
+def test_shard_fused_matches_oracle_uneven_clients(kind, param, c):
+    """The per-shard 2-D grid kernel with client-block padding (block_clients
+    larger than / not dividing c) matches the oracle — padded rows are zero
+    updates + zero material, which every compressor maps to exact zero."""
+    d = 300
+    x = _rand_matrix(c, d, seed=c)
+    scale = jnp.asarray(np.random.default_rng(c).uniform(0, 2, c).astype("f4"))
+    mats = _mats_for(x, jax.random.PRNGKey(5), kind, param)
+    sq, agg = ops.shard_compress_aggregate(x, scale, mats, kind, param,
+                                           chunk=64, block_clients=4,
+                                           interpret=True)
+    sq_r, agg_r = ref.compress_norm_scale_aggregate_ref(x, scale, mats, kind, param)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sq_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_r), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_fused_none_kind_degenerates():
+    """kind='none' with empty material is exactly the plain fused kernel."""
+    x = _rand_matrix(2, 128)
+    scale = jnp.ones(2, jnp.float32)
+    sq, agg = ops.compress_norm_scale_aggregate(x, scale, (), "none", 0.0,
+                                                chunk=64, interpret=True)
+    sq_r, agg_r = ops.norm_scale_aggregate(x, scale, chunk=64, interpret=True)
+    assert np.array_equal(np.asarray(sq), np.asarray(sq_r))
+    assert np.array_equal(np.asarray(agg), np.asarray(agg_r))
+
+
+# --- compressor edge cases ------------------------------------------------
+
+def test_randk_frac_extremes():
+    """frac=1 keeps everything bitwise (gain 1); a vanishing frac still keeps
+    exactly one coordinate (k clamps to 1) with gain d."""
+    d = 97
+    x = jnp.asarray(np.random.default_rng(0).normal(size=d).astype("f4"))
+    key = jax.random.PRNGKey(2)
+    full = rand_k_leaf(x, 1.0, key)
+    assert np.array_equal(np.asarray(full), np.asarray(x))
+    tiny = np.asarray(rand_k_leaf(x, 1e-9, key))
+    nz = np.flatnonzero(tiny)
+    assert nz.size == 1
+    np.testing.assert_allclose(tiny[nz], np.asarray(x)[nz] * d, rtol=1e-6)
+
+
+@pytest.mark.parametrize("frac", [0.1, 0.25, 0.5])
+def test_randk_exact_k(frac):
+    """Stratified draw keeps exactly k = int(d * frac) coordinates."""
+    d = 1000
+    x = jnp.ones(d, jnp.float32)
+    out = np.asarray(rand_k_leaf(x, frac, jax.random.PRNGKey(9)))
+    assert np.count_nonzero(out) == int(d * frac)
+
+
+def test_qsgd_single_level():
+    """levels=1: every nonzero coordinate quantizes to 0 or ±||x|| and the
+    estimator stays unbiased in expectation over the uniform draws."""
+    x = jnp.asarray(np.random.default_rng(4).normal(size=256).astype("f4"))
+    out = np.asarray(qsgd_leaf(x, 1, jax.random.PRNGKey(3)))
+    nrm = float(jnp.linalg.norm(x))
+    mags = np.abs(out)
+    assert np.all((mags < 1e-6) | np.isclose(mags, nrm, rtol=1e-5))
+    means = np.mean([np.asarray(qsgd_leaf(x, 1, jax.random.PRNGKey(i)))
+                     for i in range(400)], axis=0)
+    np.testing.assert_allclose(means, np.asarray(x), atol=0.25 * nrm)
+
+
+def test_natural_fixed_points_and_denormals():
+    """Powers of two (either sign) are fixed points of natural compression;
+    denormals round to {0, ±2^-126} — never garbage."""
+    pows = jnp.asarray([1.0, -2.0, 0.25, -0.125, 4096.0], jnp.float32)
+    out = natural_leaf(pows, jax.random.PRNGKey(0))
+    assert np.array_equal(np.asarray(out), np.asarray(pows))
+    den = jnp.asarray([1e-40, -1e-40, 5e-39], jnp.float32)
+    out_d = np.asarray(natural_leaf(den, jax.random.PRNGKey(1)))
+    tiny = np.float32(2.0 ** -126)
+    assert set(np.abs(out_d)) <= {np.float32(0.0), tiny}
+
+
+@pytest.mark.parametrize("kind,param", KINDS)
+def test_zero_padding_is_exact_zero(kind, param):
+    """Zero values + zero material -> exact zero for every kind: the property
+    that makes the kernels' chunk and client-block padding safe."""
+    z = jnp.zeros((3, 64), jnp.float32)
+    zmats = tuple(jnp.zeros((3, 64), jnp.float32)
+                  for _ in range(MATERIAL_ARITY[kind]))
+    out = apply_compression_flat(z, kind, param, *zmats)
+    assert np.array_equal(np.asarray(out), np.zeros((3, 64), "f4"))
+
+
+@pytest.mark.parametrize("kind,param", KINDS)
+def test_material_apply_equals_leaf_fns(kind, param):
+    """compression_material + apply == compress_update == the one-shot leaf
+    functions, bitwise — one sampling semantics, three entry points."""
+    tree = {"a": jnp.asarray(np.random.default_rng(5).normal(size=(7, 5)).astype("f4")),
+            "b": jnp.asarray(np.random.default_rng(6).normal(size=11).astype("f4"))}
+    key = jax.random.PRNGKey(13)
+    whole = compress_update(tree, key, kind, param)
+    leaf_fn = {"randk": lambda k, x: rand_k_leaf(x, param, k),
+               "qsgd": lambda k, x: qsgd_leaf(x, param, k),
+               "natural": lambda k, x: natural_leaf(x, k)}[kind]
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    manual = treedef.unflatten([leaf_fn(k, x) for k, x in zip(keys, leaves)])
+    for a, b in zip(jax.tree_util.tree_leaves(whole),
+                    jax.tree_util.tree_leaves(manual)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

@@ -4,7 +4,6 @@ future-work item), partial availability (Appendix E), two-pass OCS round."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import FLConfig
 from repro.core import ocs

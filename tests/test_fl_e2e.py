@@ -69,7 +69,6 @@ def test_alpha_more_favourable_on_unbalanced_data():
     alphas = {}
     for did in (1, 3):
         ds = femnist_like(dataset_id=did, n_clients=80, seed=0)
-        ev = None
         init, loss, _ = mlp_classifier(ds.input_dim, ds.num_classes, hidden=32)
         fl = FLConfig(n_clients=32, expected_clients=3, sampler="aocs", local_steps=8,
                       lr_local=0.125)

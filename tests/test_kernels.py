@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.client_norm import client_sqnorms_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
 

@@ -80,8 +80,11 @@ def _workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
 @pytest.mark.parametrize("fl_kw", [{}, {"compression": "randk",
-                                        "compression_param": 0.5}],
-                         ids=["plain", "randk"])
+                                        "compression_param": 0.5},
+                                   {"compression": "qsgd",
+                                    "compression_param": 8},
+                                   {"compression": "natural"}],
+                         ids=["plain", "randk", "qsgd", "natural"])
 def test_cache_hit_vs_spill_parity(backend, fl_kw):
     """Every cache size — 0 (all spill/recompute), partial (hits AND spills
     in one round), full (no recompute) — yields identical masks and allclose

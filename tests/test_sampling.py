@@ -1,6 +1,5 @@
 """Property tests for the paper's core math (Eq. 7, Algorithm 2, Lemma 1)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -39,7 +38,6 @@ def _m_for(u):
 @given(norm_vectors)
 def test_optimal_probabilities_properties(u_list):
     u = jnp.asarray(u_list, jnp.float32)
-    n = len(u_list)
     m = _m_for(u_list)
     p = np.asarray(sampling.optimal_probabilities(u, m))
     assert np.all(p >= -1e-6) and np.all(p <= 1 + 1e-6)

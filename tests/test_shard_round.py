@@ -13,7 +13,6 @@ import numpy as np
 import pytest
 from conftest import (
     PARITY_ORACLE,
-    PARITY_VARIANTS,
     parity_fl,
     parity_mesh,
     parity_workload,

@@ -1,16 +1,13 @@
 """Substrate tests: SSM equivalences, MoE routing, checkpointing, optimizers,
 data pipeline, bits ledger."""
 
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import restore, save
 from repro.configs import get
-from repro.configs.base import FLConfig
 from repro.core.bits import BitsLedger
 from repro.data import charlm, femnist_like
 from repro.models import moe as MOE

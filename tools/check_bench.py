@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""CI benchmark-regression gate: diff a fresh benchmark artifact against the
+committed CPU baseline (benchmarks/artifacts/*.json).
+
+The bench-regression job runs the smoke benchmarks
+(``bench_round_engine --smoke``, ``bench_sim --smoke``) and then this script,
+which checks the fresh artifacts are structurally compatible with the
+committed baselines — same schema version, no combo/mode silently dropped,
+the schema-level invariants still asserted.  Wall-clock is NOT compared
+across runs (CI machines are shared; the committed baselines carry the
+reference timings, re-generated whenever the schema bumps), so the gate
+catches contract rot — a combo that stopped being emitted, a schema drift
+without a version bump, a broken evals relation — not noise.
+
+stdlib-only on purpose: the CI job can run it without installing the package
+(and a broken repro install can't take the gate down with it).
+
+Usage:
+    python tools/check_bench.py \
+        --kind round_engine \
+        --fresh benchmarks/artifacts/round_engine_smoke.json \
+        --baseline benchmarks/artifacts/round_engine.json
+    python tools/check_bench.py \
+        --kind sim \
+        --fresh benchmarks/artifacts/sim_smoke.json \
+        --baseline benchmarks/artifacts/sim.json
+
+Exit 0 when every check passes, 1 with a per-failure report otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Duplicated from benchmarks/bench_round_engine.py / bench_sim.py on purpose:
+# the gate must notice when the benchmark's emitted keys drift away from the
+# documented contract, which it cannot do by importing the drifted constant.
+ROUND_ENGINE_SCHEMA = 5
+ROUND_ENGINE_COMBO_KEYS = {
+    "us_per_round", "memory", "backend", "compression", "sent_clients",
+    "local_update_evals",
+}
+# schema-5 workload flags: every sweep asserted bitwise mask parity across
+# engines, and the pallas combos compress inside the aggregate tile stream.
+ROUND_ENGINE_WORKLOAD_FLAGS = ("mask_parity", "fused_compression")
+
+SIM_SCHEMA = 2
+SIM_MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s",
+                 "sent_total"}
+SIM_MODES = ("host", "prefetch", "scan", "host+shard", "prefetch+shard")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_round_engine(fresh: dict, baseline: dict) -> list[str]:
+    """Failures for the round-engine artifact pair (empty list = pass)."""
+    errs = []
+    for name, art in (("fresh", fresh), ("baseline", baseline)):
+        if art.get("schema") != ROUND_ENGINE_SCHEMA:
+            errs.append(f"{name}: schema {art.get('schema')!r}, "
+                        f"want {ROUND_ENGINE_SCHEMA}")
+        for flag in ROUND_ENGINE_WORKLOAD_FLAGS:
+            if art.get("workload", {}).get(flag) is not True:
+                errs.append(f"{name}: workload.{flag} is not true "
+                            "(mask-parity / fused-compression contract)")
+        for tag, entry in art.get("combos", {}).items():
+            missing = ROUND_ENGINE_COMBO_KEYS - set(entry)
+            if missing:
+                errs.append(f"{name}: combo {tag} missing keys {sorted(missing)}")
+    if errs:
+        return errs  # structure broken; the diffs below would just cascade
+
+    # no combo silently dropped: the baseline's tag set must survive in the
+    # fresh run.  Exception: shard+ tags, which run() legitimately skips when
+    # the smoke workload's client count doesn't divide the CI device count.
+    wl = fresh["workload"]
+    shard_ok = wl["n_clients"] % max(wl.get("mesh_devices", 1), 1) == 0
+    for tag in baseline["combos"]:
+        if tag in fresh["combos"]:
+            continue
+        if tag.startswith("shard+") and not shard_ok:
+            continue
+        errs.append(f"combo {tag!r} in baseline but not emitted by the fresh "
+                    "run (benchmark contract regressed)")
+
+    # the single-pass engine's acceptance relation, re-derived from the raw
+    # numbers of BOTH artifacts: cached scan == n evals, two-pass == 2n.
+    for name, art in (("fresh", fresh), ("baseline", baseline)):
+        n = art["workload"]["n_clients"]
+        for tag, entry in art["combos"].items():
+            if entry["memory"] != "scan":
+                continue
+            evals = entry["local_update_evals"]
+            want = 2 * n if "+recompute" in tag else n
+            if evals != want:
+                errs.append(f"{name}: {tag} local_update_evals={evals}, "
+                            f"want {want} (n={n})")
+    return errs
+
+
+def check_sim(fresh: dict, baseline: dict) -> list[str]:
+    """Failures for the sim artifact pair (empty list = pass)."""
+    errs = []
+    for name, art in (("fresh", fresh), ("baseline", baseline)):
+        if art.get("schema") != SIM_SCHEMA:
+            errs.append(f"{name}: schema {art.get('schema')!r}, want {SIM_SCHEMA}")
+        modes = art.get("modes", {})
+        for mode in SIM_MODES:
+            if mode not in modes:
+                errs.append(f"{name}: mode {mode!r} missing")
+                continue
+            missing = SIM_MODE_KEYS - set(modes[mode])
+            if missing:
+                errs.append(f"{name}: mode {mode} missing keys {sorted(missing)}")
+            elif not modes[mode]["rounds_per_sec"] > 0:
+                errs.append(f"{name}: mode {mode} rounds_per_sec not positive")
+    return errs
+
+
+CHECKS = {"round_engine": check_round_engine, "sim": check_sim}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--kind", choices=sorted(CHECKS), required=True)
+    ap.add_argument("--fresh", required=True,
+                    help="artifact the CI run just produced")
+    ap.add_argument("--baseline", required=True,
+                    help="committed benchmarks/artifacts/*.json baseline")
+    args = ap.parse_args(argv)
+
+    errs = CHECKS[args.kind](_load(args.fresh), _load(args.baseline))
+    if errs:
+        print(f"check_bench[{args.kind}]: {len(errs)} failure(s)")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    print(f"check_bench[{args.kind}]: OK "
+          f"({args.fresh} vs baseline {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,16 +38,28 @@ DOCSTRING_CONTRACT = [
     ("src/repro/kernels/ops.py", None, ["Eq. 2", "docs/paper_map.md"]),
     ("src/repro/kernels/ops.py", "masked_scale_aggregate", ["scale_i * U_i"]),
     ("src/repro/kernels/ops.py", "norm_scale_aggregate", ["Alg. 1 line 3", "Eq. 2"]),
+    ("src/repro/kernels/ops.py", "compress_norm_scale_aggregate",
+     ["Alg. 1 line 3", "Eq. 2", "one HBM read"]),
+    ("src/repro/kernels/ops.py", "shard_compress_aggregate", ["psum"]),
     ("src/repro/kernels/ops.py", "shard_masked_aggregate", ["Eq. 2", "psum"]),
     ("src/repro/kernels/ops.py", "sharded_masked_aggregate", ["psum"]),
     ("src/repro/kernels/norm_aggregate.py", None, ["Alg. 1 line 3", "Eq. 2", "one HBM read"]),
+    ("src/repro/kernels/norm_aggregate.py", "compress_norm_scale_aggregate_pallas",
+     ["one HBM read", "compression_material"]),
+    ("src/repro/core/compression.py", None, ["material", "unbiased"]),
+    ("src/repro/core/compression.py", "compression_material", ["MATERIAL_ARITY"]),
+    ("src/repro/core/compression.py", "apply_compression_flat", ["elementwise"]),
     ("src/repro/kernels/update_cache.py", None, ["Eq. 7", "cache_groups", "spill"]),
     ("src/repro/kernels/update_cache.py", "group_norm_aggregate", ["Eq. 2"]),
+    ("src/repro/kernels/update_cache.py", "group_compress_norm_aggregate",
+     ["spill", "Eq. 2", "bitwise"]),
     ("src/repro/kernels/update_cache.py", "local_update_evals", ["2n"]),
     ("src/repro/fl/engine.py", None, ["Eq. 2", "Appendix E"]),
     ("src/repro/fl/engine.py", "make_engine", ["Alg. 2", "Eq. 2"]),
     ("src/repro/fl/engine.py", "RoundEngine", ["Eq. 7", "Eq. 2"]),
     ("src/repro/fl/engine.py", "compress_client_updates", ["bitwise"]),
+    ("src/repro/fl/engine.py", "client_compression_material",
+     ["per-client subkey"]),
     ("src/repro/fl/shard_round.py", None, ["all_gather", "psum", "compress"]),
     ("src/repro/fl/shard_round.py", "validate_shard_config", ["PRNG"]),
     ("src/repro/core/bits.py", None, ["Remark 3", "footnote 5"]),
@@ -64,6 +76,7 @@ DOCSTRING_CONTRACT = [
 # modules whose every public top-level def/class must carry a docstring
 FULL_COVERAGE_MODULES = [
     "src/repro/core/ocs.py",
+    "src/repro/core/compression.py",
     "src/repro/core/sampling.py",
     "src/repro/core/improvement.py",
     "src/repro/kernels/ops.py",
@@ -79,7 +92,11 @@ FULL_COVERAGE_MODULES = [
 ]
 
 ARCHITECTURE_MUSTS = [
-    "all_gather", "psum", '"schema": 4', "mesh_axis_size",
+    "all_gather", "psum", '"schema": 5', "mesh_axis_size",
+    # the in-stream compression tentpole: fused compress kernels on both the
+    # single-device and per-shard aggregate paths
+    "compress_norm_scale_aggregate_pallas", "sharded_compress_aggregate_pallas",
+    "in-stream compress",
     # the scan-engine dataflow section (two-pass vs single-pass + memory
     # formulas) must survive future edits
     "Scan engine dataflow", "cache_groups·scan_group·d", "## Limits",
@@ -99,12 +116,14 @@ PAPER_MAP_MUSTS = [
     "src/repro/sim/scenarios.py", "src/repro/sim/driver.py",
     "Sec. 4 — experiment grid", "Sec. 4 — multi-round evaluation loop",
     "mesh-sharded client pool", "compress_client_updates",
+    "compress_norm_scale_aggregate",
 ]
 # docs/benchmarks.md: the run recipe, the schema-4 field contract, and the
 # default-gating policy — enforced so the CI docs job catches drift between
 # the harness and its documentation.
 BENCHMARKS_MUSTS = [
     "bench_round_engine", "local_update_evals", "--smoke", "cache_groups",
+    "bench-regression", "check_bench", "mask_parity", "fused_compression",
     "us_per_round", "pallas_interpret", "round_engine.json",
     "bench_sim", "sim.json", "rounds_per_sec",
     "host+shard", "prefetch+shard", "mesh_axis_size", "build_client_mesh",
