@@ -28,12 +28,22 @@ subsystem (asserted in :func:`run`; the committed
 carry no timing gate: on an emulated CPU mesh their wall-clock is a
 correctness proxy, like the interpret-mode pallas combos.
 
-Artifact: ``benchmarks/artifacts/sim.json`` (schema 2, field contract in
-docs/benchmarks.md; schema 1 lacked the ``*+shard`` modes and
-``workload.mesh_axis_size``).  ``--smoke`` runs the reduced scenario and
-asserts the artifact contract without timing gates (part of the CI
-``bench-regression`` job, which also diffs the fresh artifact against the
-committed baseline via tools/check_bench.py).
+Since schema 3 the matrix also runs the straggler column: ``host+straggler``,
+``prefetch+straggler`` and ``scan+straggler`` execute the registered
+straggler scenario (client-state layer: Markov availability chains, round
+deadline with over-selection, mid-round dropout) through the same three
+modes — masks must stay bitwise identical across the three straggler columns
+(asserted per run; the system layer adds per-round state-step work, so these
+columns measure the client-state overhead).  Their entries carry the
+system-counter totals (``over_selected_total`` / ``deadline_misses_total`` /
+``dropouts_total``).
+
+Artifact: ``benchmarks/artifacts/sim.json`` (schema 3, field contract in
+docs/benchmarks.md; schema 2 lacked the ``*+straggler`` columns, schema 1
+the ``*+shard`` modes and ``workload.mesh_axis_size``).  ``--smoke`` runs
+the reduced scenarios and asserts the artifact contract without timing gates
+(part of the CI ``bench-regression`` job, which also diffs the fresh
+artifact against the committed baseline via tools/check_bench.py).
 """
 
 from __future__ import annotations
@@ -49,10 +59,12 @@ from repro.sim.driver import build_client_mesh, run_scenario, validate_ledger
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
-SCHEMA = 2
+SCHEMA = 3
 
 # keys every per-mode entry must carry (checked by smoke() / tools/check_bench.py)
 MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s", "sent_total"}
+# extra keys the straggler columns must carry
+STRAGGLER_KEYS = {"over_selected_total", "deadline_misses_total", "dropouts_total"}
 
 
 def _shard_mesh(scenario, reduced: bool):
@@ -67,6 +79,7 @@ def _shard_mesh(scenario, reduced: bool):
 
 def run(
     scenario: str = "femnist1-fedavg-aocs",
+    straggler_scenario: str = "femnist1-fedavg-aocs-straggler",
     rounds: int = 48,
     rounds_per_scan: int = 8,
     seed: int = 0,
@@ -75,31 +88,41 @@ def run(
     artifact: str = "sim.json",
     assert_speed: bool = True,
 ):
-    """Time the three driver modes plus the two shard columns on
-    ``scenario``; writes the schema-2 artifact.
+    """Time the three driver modes plus the shard and straggler columns;
+    writes the schema-3 artifact.
 
     Each mode runs ``reps`` times and records its best steady-state
     ``rounds_per_sec`` (per-run variance on a shared CPU is a few percent;
     best-of-N is the usual microbenchmark answer).  ``assert_speed``
     enforces the subsystem's acceptance gate — prefetch and scan at least as
     fast as the host loop — and is left off in smoke runs whose shapes are
-    too tiny to time meaningfully.
+    too tiny to time meaningfully.  The straggler columns run
+    ``straggler_scenario`` (client-state layer on), so their masks are
+    parity-gated among themselves rather than against the plain columns —
+    a different scenario draws different cohorts.
     """
     os.makedirs(ART, exist_ok=True)
-    results = {"schema": SCHEMA, "scenario": scenario, "workload": None, "modes": {}}
+    results = {"schema": SCHEMA, "scenario": scenario,
+               "straggler_scenario": straggler_scenario,
+               "workload": None, "modes": {}}
     ledgers = {}
-    # the single-device modes plus the mesh column (schema 2): host/prefetch
+    # the single-device modes, the mesh column (schema 2: host/prefetch
     # re-run through the shard_map round on a client mesh over the local
-    # devices; scan has no shard column (docs/architecture.md#limits).
+    # devices; scan has no shard column — docs/architecture.md#limits), and
+    # the straggler column (schema 3: the client-state-layer scenario
+    # through all three driver modes).
     grid = [("host", None), ("prefetch", None), ("scan", None),
-            ("host", "shard"), ("prefetch", "shard")]
-    for mode, shard in grid:
-        tag = mode if shard is None else f"{mode}+shard"
-        mesh = None if shard is None else _shard_mesh(scenario, reduced)
+            ("host", "shard"), ("prefetch", "shard"),
+            ("host", "straggler"), ("prefetch", "straggler"),
+            ("scan", "straggler")]
+    for mode, col in grid:
+        tag = mode if col is None else f"{mode}+{col}"
+        sc_name = straggler_scenario if col == "straggler" else scenario
+        mesh = None if col != "shard" else _shard_mesh(scenario, reduced)
         led = None
         for _ in range(max(reps, 1)):
             _, rep_led = run_scenario(
-                scenario, reduced=reduced, mode=mode, rounds=rounds,
+                sc_name, reduced=reduced, mode=mode, rounds=rounds,
                 rounds_per_scan=rounds_per_scan, seed=seed, mesh=mesh,
             )
             if led is None or rep_led.rounds_per_sec > led.rounds_per_sec:
@@ -121,8 +144,12 @@ def run(
             entry["rounds_per_scan"] = rounds_per_scan
         if mode != "host":
             entry["pool_bytes"] = led.workload.get("pool_bytes")
-        if shard is not None:
+        if col == "shard":
             entry["mesh_axis_size"] = led.workload.get("mesh_axis_size")
+        if col == "straggler":
+            entry["over_selected_total"] = int(np.sum(led.over_selected))
+            entry["deadline_misses_total"] = int(np.sum(led.deadline_misses))
+            entry["dropouts_total"] = int(np.sum(led.dropouts))
         results["modes"][tag] = entry
         csv_line(
             f"sim_{tag}", entry["us_per_round"],
@@ -135,6 +162,19 @@ def run(
         for k in range(rounds):
             assert np.array_equal(ledgers["host"].masks[k], ledgers[tag].masks[k]), (
                 tag, k, "mask divergence",
+            )
+    # same gate for the straggler columns among themselves: the client-state
+    # chain, deadline and dropout draws must land identically in all three
+    # driver modes — counters included.
+    for tag in ("prefetch+straggler", "scan+straggler"):
+        ref = ledgers["host+straggler"]
+        for k in range(rounds):
+            assert np.array_equal(ref.masks[k], ledgers[tag].masks[k]), (
+                tag, k, "straggler mask divergence",
+            )
+        for series in ("over_selected", "deadline_misses", "dropouts"):
+            assert getattr(ref, series) == getattr(ledgers[tag], series), (
+                tag, series, "straggler counter divergence",
             )
     if assert_speed:
         host_rps = results["modes"]["host"]["rounds_per_sec"]
@@ -150,21 +190,23 @@ def run(
 
 
 def smoke():
-    """CI gate: reduced-scenario run + schema-2 artifact contract assertions.
+    """CI gate: reduced-scenario run + schema-3 artifact contract assertions.
 
     Checks the artifact shape (schema marker, per-mode key set, the scan
     block size, pool bytes on the pooled modes, the shard column's mesh axis
-    size) and the cross-mode mask parity that :func:`run` always enforces —
-    shard modes included; timing gates are skipped at smoke shapes.  Writes
-    its own (git-ignored) artifact so a local smoke never clobbers the
-    committed sim.json CPU baseline.
+    size, the straggler columns' counter totals) and the cross-mode mask
+    parity that :func:`run` always enforces — shard and straggler modes
+    included; timing gates are skipped at smoke shapes.  Writes its own
+    (git-ignored) artifact so a local smoke never clobbers the committed
+    sim.json CPU baseline.
     """
     res = run(rounds=6, rounds_per_scan=3, reps=1, reduced=True,
               artifact="sim_smoke.json", assert_speed=False)
     assert res["schema"] == SCHEMA, res["schema"]
     assert {"rounds", "batch_size", "pool_clients", "model_dim", "fl",
             "backend_platform"} <= set(res["workload"])
-    for mode in ("host", "prefetch", "scan", "host+shard", "prefetch+shard"):
+    for mode in ("host", "prefetch", "scan", "host+shard", "prefetch+shard",
+                 "host+straggler", "prefetch+straggler", "scan+straggler"):
         assert mode in res["modes"], mode
         assert MODE_KEYS <= set(res["modes"][mode]), mode
         assert res["modes"][mode]["rounds_per_sec"] > 0, mode
@@ -172,7 +214,12 @@ def smoke():
     assert res["modes"]["prefetch"]["pool_bytes"] > 0
     for mode in ("host+shard", "prefetch+shard"):
         assert res["modes"][mode]["mesh_axis_size"] >= 1, mode
-    print("sim bench smoke OK (schema 2)")
+    for mode in ("host+straggler", "prefetch+straggler", "scan+straggler"):
+        entry = res["modes"][mode]
+        assert STRAGGLER_KEYS <= set(entry), mode
+        for k in STRAGGLER_KEYS:
+            assert entry[k] >= 0, (mode, k)
+    print("sim bench smoke OK (schema 3)")
 
 
 if __name__ == "__main__":

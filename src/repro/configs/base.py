@@ -214,6 +214,10 @@ class FLConfig:
     compression_param: float = 0.1 # randk fraction / qsgd levels (natural: unused)
     # paper Appendix E: per-client availability probability q (1.0 = always)
     availability: float = 1.0
+    # system-realism over-selection (sim/pool.py client-state layer): sample
+    # round(m * over_select) clients so the post-deadline/dropout survivor
+    # count still approaches m.  1.0 = the paper's plain m-target plan.
+    over_select: float = 1.0
     # round-engine execution policy (fl/engine.py) — orthogonal axes:
     round_engine: str = "vmap"     # memory policy: vmap | scan (single-pass OCS)
     agg_backend: str = "jnp"       # masked-aggregate backend: jnp | pallas
@@ -239,3 +243,14 @@ class FLConfig:
             )
         if self.scan_group < 1:
             raise ValueError(f"scan_group must be >= 1, got {self.scan_group}")
+        if not 1.0 <= self.over_select <= float(max(self.n_clients, 1)):
+            raise ValueError(
+                f"over_select must be in [1, n_clients], got {self.over_select}"
+            )
+
+    def cohort_target(self) -> int:
+        """The sampling plan's m after over-selection: ``round(m * over_select)``
+        clamped to ``[1, n_clients]`` (== ``expected_clients`` when
+        ``over_select`` is 1, preserving the paper's plan bit-for-bit)."""
+        m = int(round(self.expected_clients * self.over_select))
+        return max(1, min(m, self.n_clients))

@@ -45,18 +45,44 @@ class SamplingPlan(NamedTuple):
     """Everything the master decides from the (n,) norm vector alone.
 
     ``scale`` is the per-client coefficient of the unbiased estimator:
-    ``mask_i * w_i / (p_i * q)`` (zero for unsampled clients), so any backend
-    can realise the aggregate as the single contraction ``sum_i scale_i U_i``.
+    ``mask_i * w_i / (p_i * q_i)`` (zero for unsampled clients), so any
+    backend can realise the aggregate as the single contraction
+    ``sum_i scale_i U_i``.  ``selected`` records the Bernoulli draw BEFORE
+    deadline/dropout attrition (== ``mask`` on the scalar-availability
+    paths); the gap between the two is the system layer's per-round loss.
     """
 
     probs: jax.Array             # (n,) inclusion probabilities
     mask: jax.Array              # (n,) realized participation (incl. availability)
     scale: jax.Array             # (n,) f32 estimator coefficients
     avail: jax.Array             # (n,) availability draws (all-True when q = 1)
+    selected: jax.Array          # (n,) Bernoulli draw pre deadline/dropout
     norms: jax.Array             # (n,) norms the plan was computed from
     alpha: jax.Array
     gamma: jax.Array
     expected_clients: jax.Array  # sum(p) <= m
+
+
+class AvailabilityTrace(NamedTuple):
+    """One round's realized system-layer availability for the (n,) cohort.
+
+    Generalizes Appendix E's scalar Bernoulli(q) into a per-client *trace*:
+    ``up`` is the Markov-chain availability (known before sampling — a down
+    client's norm is zeroed and it is never selected), while ``on_time`` and
+    ``kept`` are post-selection attrition (a selected client can still miss
+    the round deadline or drop mid-round).  ``include_prob`` is each client's
+    marginal inclusion probability under the whole process —
+    ``P(up) * P(on_time) * P(kept)`` — and is what the estimator divides by,
+    so ``E[scale_i] = w_i`` and the aggregate stays unbiased exactly as in
+    the scalar-q analysis (``scale_i = mask_i * w_i / (p_i * include_prob_i)``).
+    Produced by :func:`repro.sim.pool.step_client_state`; consumed by
+    :func:`sampling_plan` via its ``availability`` argument.
+    """
+
+    up: jax.Array            # (n,) bool — Markov chain says the device is reachable
+    on_time: jax.Array       # (n,) bool — latency draw beat the round deadline
+    kept: jax.Array          # (n,) bool — survived mid-round dropout injection
+    include_prob: jax.Array  # (n,) f32 — P(up)·P(on_time)·P(kept) per client
 
 
 def client_norms(updates: Any, weights: jax.Array) -> jax.Array:
@@ -85,7 +111,7 @@ def sampling_plan(
     key: jax.Array,
     sampler: str | Callable = "aocs",
     j_max: int = 4,
-    availability: float = 1.0,
+    availability: float | AvailabilityTrace = 1.0,
 ) -> SamplingPlan:
     """Norms -> probabilities -> Bernoulli mask -> estimator coefficients.
 
@@ -98,32 +124,54 @@ def sampling_plan(
     coefficient ``scale_i = mask_i * w_i / (p_i * q)`` that turns Eq. 2 into
     the single contraction ``sum_i scale_i U_i`` for any backend.
 
-    Deterministic in ``key``: the availability split (taken iff
+    ``availability`` may instead be a per-round :class:`AvailabilityTrace`
+    (the system-realism generalization of Appendix E): down clients get
+    their norm zeroed exactly like the scalar-q path, the Bernoulli draw is
+    recorded as ``selected``, deadline misses and mid-round dropouts are
+    subtracted post hoc (``mask = selected & on_time & kept``), and the
+    estimator divides by the trace's per-client ``include_prob`` instead of
+    the scalar q.  The trace is drawn OUTSIDE this function (from its own
+    fold of the round key) so the trace path consumes ``key`` exactly like
+    the ``availability == 1`` path — no extra split.
+
+    Deterministic in ``key``: the availability split (taken iff scalar
     ``availability < 1``) and the participation draw consume the key in a
-    fixed order, so two engines fed the same norms and key produce bitwise
-    identical masks — the property the engine-parity tests gate on (see
-    docs/paper_map.md for the full contract).
+    fixed order, so two engines fed the same norms, key, and trace produce
+    bitwise identical masks — the property the engine-parity tests gate on
+    (see docs/paper_map.md for the full contract).
     """
     fn = sampling.SAMPLERS[sampler] if isinstance(sampler, str) else sampler
     u = jnp.asarray(norms)
     n = u.shape[0]
+    trace = availability if isinstance(availability, AvailabilityTrace) else None
     # paper Appendix E: partial availability — clients are available with
     # probability q; sampling acts on the available set and the estimator
     # rescales by 1/q to stay unbiased over the availability distribution.
-    if availability < 1.0:
+    if trace is not None:
+        avail = trace.up & trace.on_time & trace.kept
+        u = jnp.where(trace.up, u, 0.0)  # down clients are never sampled
+        q = trace.include_prob
+    elif availability < 1.0:
         k_avail, key = jax.random.split(key)
         avail = jax.random.bernoulli(k_avail, availability, shape=(n,))
         u = jnp.where(avail, u, 0.0)  # unavailable clients are never sampled
+        q = availability
     else:
         avail = jnp.ones((n,), bool)
+        q = 1.0
     if fn is sampling.aocs_probabilities:
         p = fn(u, m, j_max)
     else:
         p = fn(u, m)
-    mask = jax.random.bernoulli(key, jnp.clip(p, 0.0, 1.0), shape=(n,)) & avail
+    bern = jax.random.bernoulli(key, jnp.clip(p, 0.0, 1.0), shape=(n,))
+    if trace is not None:
+        selected = bern & trace.up
+        mask = selected & trace.on_time & trace.kept
+    else:
+        selected = mask = bern & avail
     scale = jnp.where(
         mask & (p > _EPS),
-        weights.astype(jnp.float32) / jnp.maximum(p * availability, _EPS),
+        weights.astype(jnp.float32) / jnp.maximum(p * q, _EPS),
         0.0,
     )
     alpha, gamma = improvement_factors(u, m)
@@ -132,6 +180,7 @@ def sampling_plan(
         mask=mask,
         scale=scale,
         avail=avail,
+        selected=selected,
         norms=u,
         alpha=alpha,
         gamma=gamma,

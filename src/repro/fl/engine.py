@@ -66,7 +66,15 @@ MEMORY_POLICIES = ("vmap", "scan")
 
 
 class RoundMetrics(NamedTuple):
-    """Per-round observables: loss, alpha/gamma (Defs. 11/12), probs/mask."""
+    """Per-round observables: loss, alpha/gamma (Defs. 11/12), probs/mask.
+
+    The trailing system-layer counters are all zero (and
+    ``selected_clients == sent_clients``) when the round ran without an
+    :class:`~repro.core.ocs.AvailabilityTrace`: ``selected_clients`` is the
+    Bernoulli draw before deadline/dropout attrition, ``deadline_misses``
+    the selected clients whose latency beat them, ``dropouts`` the selected
+    on-time clients lost to mid-round faults.
+    """
 
     loss: jax.Array
     alpha: jax.Array
@@ -76,6 +84,9 @@ class RoundMetrics(NamedTuple):
     probs: jax.Array
     norms: jax.Array
     mask: jax.Array
+    selected_clients: jax.Array
+    deadline_misses: jax.Array
+    dropouts: jax.Array
 
 
 def client_compression_material(updates: Any, keys: jax.Array, fl: FLConfig):
@@ -168,7 +179,10 @@ def make_engine(loss_fn: Callable, fl: FLConfig, server_opt=None, *,
                 interpret: bool | None = None) -> Callable:
     """Mesh-aware round-step factory: THE entry point callers should use.
 
-    Returns ``round_step(params, opt_state, batch, weights, key)``:
+    Returns ``round_step(params, opt_state, batch, weights, key, trace=None)``
+    (the optional trailing ``trace`` is a per-round
+    :class:`~repro.core.ocs.AvailabilityTrace` from the sim client-state
+    layer; omitted, every path behaves exactly as before):
 
     * ``mesh=None`` — the single-device/GSPMD :class:`RoundEngine`, configured
       by ``fl.round_engine`` x ``fl.agg_backend`` (x ``fl.scan_group``).
@@ -200,7 +214,7 @@ def make_engine(loss_fn: Callable, fl: FLConfig, server_opt=None, *,
 class RoundEngine:
     """Builds the jit-able ``round_step`` for one (memory, backend) pair.
 
-    ``round_step(params, opt_state, batch, weights, key) ->
+    ``round_step(params, opt_state, batch, weights, key, trace=None) ->
     (params, opt_state, RoundMetrics)`` — one communication round of
     Algorithm 3: local updates, norms ``u_i = ||w_i U_i||`` (Alg. 1 line 3),
     probabilities ``p_i`` (Eq. 7 exact / Alg. 2 approximate), independent
@@ -288,7 +302,14 @@ class RoundEngine:
             return new_params, opt_state
         return self.server_opt.update(aggregate, opt_state, params)
 
-    def _metrics(self, plan: ocs.SamplingPlan, losses) -> RoundMetrics:
+    def _metrics(self, plan: ocs.SamplingPlan, losses, trace=None) -> RoundMetrics:
+        if trace is None:
+            misses = drops = jnp.zeros((), jnp.int32)
+        else:
+            misses = jnp.sum(plan.selected & ~trace.on_time).astype(jnp.int32)
+            drops = jnp.sum(
+                plan.selected & trace.on_time & ~trace.kept
+            ).astype(jnp.int32)
         return RoundMetrics(
             loss=jnp.mean(losses),
             alpha=plan.alpha,
@@ -298,13 +319,17 @@ class RoundEngine:
             probs=plan.probs,
             norms=plan.norms,
             mask=plan.mask,
+            selected_clients=jnp.sum(plan.selected).astype(jnp.int32),
+            deadline_misses=misses,
+            dropouts=drops,
         )
 
-    def _plan(self, u, weights, k_sample) -> ocs.SamplingPlan:
+    def _plan(self, u, weights, k_sample, trace=None) -> ocs.SamplingPlan:
         fl = self.fl
         return ocs.sampling_plan(
-            u, weights, fl.expected_clients, k_sample,
-            sampler=fl.sampler, j_max=fl.j_max, availability=fl.availability,
+            u, weights, fl.cohort_target(), k_sample,
+            sampler=fl.sampler, j_max=fl.j_max,
+            availability=fl.availability if trace is None else trace,
         )
 
     # -- memory policies ----------------------------------------------------
@@ -317,14 +342,14 @@ class RoundEngine:
 
         fl = self.fl
 
-        def round_step(params, opt_state, batch, weights, key):
+        def round_step(params, opt_state, batch, weights, key, trace=None):
             k_sample, k_comp = jax.random.split(key)
             updates, losses = jax.vmap(self._local_update, in_axes=(None, 0))(
                 params, batch
             )
             if fl.compression == "none":
                 u = ocs.client_norms(updates, weights)
-                plan = self._plan(u, weights, k_sample)
+                plan = self._plan(u, weights, k_sample, trace)
                 aggregate = ocs.aggregate_updates(
                     updates, plan.scale, backend=self.backend,
                     interpret=self.interpret,
@@ -343,7 +368,7 @@ class RoundEngine:
                 mats = client_compression_material(updates, comp_keys, fl)
                 compressed = client_apply_compression(updates, mats, fl)
                 u = ocs.client_norms(compressed, weights)
-                plan = self._plan(u, weights, k_sample)
+                plan = self._plan(u, weights, k_sample, trace)
                 if self.backend == "pallas":
                     flat = kops.tree_to_client_matrix(updates)
                     mat_flats = tuple(
@@ -362,7 +387,7 @@ class RoundEngine:
                         interpret=self.interpret,
                     )
             new_params, new_opt = self._apply_server(params, opt_state, aggregate)
-            return new_params, new_opt, self._metrics(plan, losses)
+            return new_params, new_opt, self._metrics(plan, losses, trace)
 
         return round_step
 
@@ -386,7 +411,7 @@ class RoundEngine:
         def take(tree, lo, hi):
             return jax.tree_util.tree_map(lambda x: x[lo:hi], tree)
 
-        def round_step(params, opt_state, batch, weights, key):
+        def round_step(params, opt_state, batch, weights, key, trace=None):
             k_sample, k_comp = jax.random.split(key)
             gbatch = group_batches(batch)
             w_groups = weights.reshape(n_groups, g)
@@ -439,7 +464,7 @@ class RoundEngine:
                 loss_parts.append(losses_s)
             u = jnp.concatenate(norm_parts, axis=0).reshape(n)
             losses = jnp.concatenate(loss_parts, axis=0).reshape(n)
-            plan = self._plan(u, weights, k_sample)
+            plan = self._plan(u, weights, k_sample, trace)
             scale_g = plan.scale.reshape(n_groups, g)
 
             # post-plan aggregate into one flat f32 (D,) accumulator, group by
@@ -498,6 +523,6 @@ class RoundEngine:
             )
 
             new_params, new_opt = self._apply_server(params, opt_state, aggregate)
-            return new_params, new_opt, self._metrics(plan, losses)
+            return new_params, new_opt, self._metrics(plan, losses, trace)
 
         return round_step

@@ -91,8 +91,8 @@ def validate_shard_config(fl: FLConfig, axis_size: int) -> None:
 
 def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = None,
                          interpret: bool | None = None):
-    """Returns round_step(params, opt_state, batch, weights, key) with the
-    client dimension sharded over ``client_axis`` of ``mesh``.
+    """Returns round_step(params, opt_state, batch, weights, key, trace=None)
+    with the client dimension sharded over ``client_axis`` of ``mesh``.
 
     ``client_axis`` defaults to ``fl.client_axis``; ``fl.agg_backend``
     selects the aggregation path (see module docstring), and ``interpret``
@@ -114,8 +114,10 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
     validate_shard_config(fl, axis_size)
     local_update = make_local_update(loss_fn, fl)
 
-    def body(params, batch, weights, key):
+    def body(params, batch, weights, key, trace=None):
         # params/key replicated; batch/weights sharded on the client axis.
+        # trace (when given) is the round's AvailabilityTrace, replicated —
+        # every shard applies the same realized system state.
         updates, losses = jax.vmap(local_update, in_axes=(None, 0))(params, batch)
 
         # same key discipline as RoundEngine (k_sample, k_comp = split(key)),
@@ -150,8 +152,9 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
         u_all = jax.lax.all_gather(u_local, client_axis, tiled=True)     # (n,)
         w_all = jax.lax.all_gather(weights, client_axis, tiled=True)     # (n,)
         plan = ocs.sampling_plan(
-            u_all, w_all, fl.expected_clients, k_sample,
-            sampler=fl.sampler, j_max=fl.j_max, availability=fl.availability,
+            u_all, w_all, fl.cohort_target(), k_sample,
+            sampler=fl.sampler, j_max=fl.j_max,
+            availability=fl.availability if trace is None else trace,
         )
         scale = sl(plan.scale)
 
@@ -182,26 +185,48 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
             lambda pp, gg: (pp - fl.lr_global * gg).astype(pp.dtype), params, aggregate
         )
         loss = jax.lax.pmean(jnp.mean(losses), client_axis)
-        return new_params, (loss, plan.norms, plan.probs, plan.mask)
+        return new_params, (loss, plan.norms, plan.probs, plan.mask, plan.selected)
 
     _shard_map, _check = kops.get_shard_map()
+    outs = (P(), (P(), P(), P(), P(), P()))
     shard_fn = _shard_map(
-        body,
+        lambda params, batch, weights, key: body(params, batch, weights, key),
         mesh=mesh,
         in_specs=(P(), P(client_axis), P(client_axis), P()),
-        out_specs=(P(), (P(), P(), P(), P())),
+        out_specs=outs,
+        **_check,
+    )
+    # trace variant: same body, the AvailabilityTrace rides in replicated
+    # (P() over every leaf) so each shard sees the full (n,) system state.
+    shard_fn_trace = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(client_axis), P(client_axis), P(), P()),
+        out_specs=outs,
         **_check,
     )
 
-    def round_step(params, opt_state, batch, weights, key):
-        new_params, (loss, u, p, mask) = shard_fn(params, batch, weights, key)
+    def round_step(params, opt_state, batch, weights, key, trace=None):
+        if trace is None:
+            new_params, (loss, u, p, mask, selected) = shard_fn(
+                params, batch, weights, key
+            )
+            misses = drops = jnp.zeros((), jnp.int32)
+        else:
+            new_params, (loss, u, p, mask, selected) = shard_fn_trace(
+                params, batch, weights, key, trace
+            )
+            misses = jnp.sum(selected & ~trace.on_time).astype(jnp.int32)
+            drops = jnp.sum(selected & trace.on_time & ~trace.kept).astype(jnp.int32)
         from repro.core.improvement import improvement_factors
 
-        alpha, gamma = improvement_factors(u, fl.expected_clients)
+        alpha, gamma = improvement_factors(u, fl.cohort_target())
         metrics = RoundMetrics(
             loss=loss, alpha=alpha, gamma=gamma,
             expected_clients=jnp.sum(p), sent_clients=jnp.sum(mask),
             probs=p, norms=u, mask=mask,
+            selected_clients=jnp.sum(selected).astype(jnp.int32),
+            deadline_misses=misses, dropouts=drops,
         )
         return new_params, opt_state, metrics
 

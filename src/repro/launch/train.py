@@ -17,6 +17,14 @@ selects the double-buffered device-pool pipeline vs the legacy host loop,
 scan-over-rounds and a mesh are mutually exclusive).  The ledger artifact
 lands under benchmarks/artifacts/sim/.
 
+``--stragglers SPEC`` / ``--deadline T`` switch on the client-state layer
+(repro/sim/pool.py): Markov availability chains, heterogeneous latency vs a
+round deadline, dropout fault injection, with ``over=`` over-selection.
+They compose with both branches — overriding a scenario cell's own
+``SystemConfig``, or threading an availability trace through the arch
+round loop (e.g. ``--stragglers p_up=0.35,p_down=0.15,drop=0.1,over=2
+--deadline 2.0``).
+
 Examples (CPU container — reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
       --rounds 20 --clients 8 --expected 2 --sampler aocs
@@ -31,6 +39,7 @@ Examples (CPU container — reduced configs):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 
@@ -62,6 +71,49 @@ def synthetic_token_batch(rng, cfg, n, r, b, s):
     return {k: jnp.asarray(v) for k, v in batch.items()}
 
 
+def parse_stragglers(spec: str | None, deadline: float | None):
+    """``--stragglers``/``--deadline`` -> ``(SystemConfig | None, over_select)``.
+
+    ``spec`` is a comma-separated k=v list over the client-state knobs —
+    ``p_up``, ``p_down``, ``latency_mu``, ``latency_sigma``, ``drop``
+    (drop_prob) and ``over`` (FLConfig.over_select) — e.g.
+    ``p_up=0.35,p_down=0.15,drop=0.1,over=2``; ``deadline`` is its own flag
+    (it composes with the defaults when given alone).  Returns
+    ``(None, None)`` when neither flag was passed.
+    """
+    if spec is None and deadline is None:
+        return None, None
+    from repro.sim.pool import SystemConfig
+
+    kw, over = {}, None
+    for part in (spec.split(",") if spec else []):
+        if "=" not in part:
+            raise SystemExit(f"--stragglers entry {part!r} is not k=v")
+        k, v = part.split("=", 1)
+        k = k.strip()
+        try:
+            v = float(v)
+        except ValueError:
+            raise SystemExit(f"--stragglers {k}={v!r}: not a number") from None
+        if k == "over":
+            over = v
+        elif k == "drop":
+            kw["drop_prob"] = v
+        elif k in ("p_up", "p_down", "latency_mu", "latency_sigma"):
+            kw[k] = v
+        else:
+            raise SystemExit(
+                f"--stragglers key {k!r} unknown; want p_up, p_down, "
+                f"latency_mu, latency_sigma, drop, over"
+            )
+    if deadline is not None:
+        kw["deadline"] = deadline
+    try:
+        return SystemConfig(**kw), over
+    except ValueError as e:
+        raise SystemExit(f"--stragglers/--deadline: {e}") from None
+
+
 def run_scenario_cli(args):
     """The ``--scenario`` branch: one experiment-grid cell via repro.sim."""
     from repro.sim.driver import build_client_mesh, run_scenario
@@ -78,6 +130,12 @@ def run_scenario_cli(args):
     else:
         mode = "prefetch" if args.prefetch == "on" else "host"
     sc = get_scenario(args.scenario)
+    system, over = parse_stragglers(args.stragglers, args.deadline)
+    if system is not None:
+        # CLI overrides the cell's own system config (if any); 'over=' rides
+        # into the FLConfig so the plan actually over-selects.
+        fl = sc.fl if over is None else dataclasses.replace(sc.fl, over_select=over)
+        sc = sc.with_(system=system, fl=fl)
     if args.shard == "off":
         # an explicit off overrides even a Scenario.sharded cell (the only
         # way to run a mesh cell's config single-device / in scan mode)
@@ -108,8 +166,13 @@ def run_scenario_cli(args):
         artifact=artifact,
     )
     for k, (loss, sent) in enumerate(zip(ledger.loss, ledger.sent)):
+        sys_col = ""
+        if effective.system is not None:
+            sys_col = (f"sel {ledger.over_selected[k]} "
+                       f"miss {ledger.deadline_misses[k]} "
+                       f"drop {ledger.dropouts[k]} ")
         print(f"[round {k:3d}] loss {loss:.4f} alpha {ledger.alpha[k]:.3f} "
-              f"sent {sent}/{ledger.fl['n_clients']} "
+              f"sent {sent}/{ledger.fl['n_clients']} {sys_col}"
               f"up {ledger.uplink_bits[k]/1e9:.2f}G down {ledger.downlink_bits[k]/1e9:.2f}G")
     print(f"[sim] {ledger.rounds_per_sec:.1f} rounds/s (steady-state), "
           f"artifact {artifact}")
@@ -133,6 +196,14 @@ def main():
     ap.add_argument("--sim-rounds-per-scan", type=int, default=0,
                     help="with --scenario: >0 selects the scan-over-rounds "
                          "fast path with this block length")
+    ap.add_argument("--stragglers", default=None, metavar="SPEC",
+                    help="client-state layer spec, comma-separated k=v over "
+                         "p_up, p_down, latency_mu, latency_sigma, drop "
+                         "(drop_prob), over (over_select) — e.g. "
+                         "'p_up=0.35,p_down=0.15,drop=0.1,over=2'")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="round deadline in latency units (enables the "
+                         "client-state layer; composes with --stragglers)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--expected", type=int, default=2)
     ap.add_argument("--sampler", default="aocs",
@@ -165,15 +236,27 @@ def main():
 
     cfg = get(args.arch)
     model = build_model(cfg, remat=False)
+    system, over = parse_stragglers(args.stragglers, args.deadline)
     fl = FLConfig(
         n_clients=args.clients, expected_clients=args.expected, sampler=args.sampler,
         local_steps=args.local_steps, lr_local=args.lr_local,
         round_engine=args.engine, agg_backend=args.agg_backend,
         scan_group=args.scan_group, cache_groups=args.cache_groups,
+        over_select=over if over is not None else 1.0,
     )
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    state = state_step = None
+    if system is not None:
+        # arch path: every round's cohort IS the full client set, so the
+        # trace covers all n clients each round.
+        from repro.sim.pool import init_client_state, step_client_state
+
+        state = init_client_state(fl.n_clients, system, jax.random.fold_in(key, 2))
+        state_step = jax.jit(
+            lambda st, kk, c: step_client_state(st, kk, c, system)
+        )
 
     n_dev = jax.device_count()
     # the shard_map round has no scan/cache memory policy (see
@@ -208,12 +291,20 @@ def main():
         batch = synthetic_token_batch(rng, cfg, fl.n_clients, fl.local_steps,
                                       args.batch, args.seq)
         t0 = time.time()
-        params, _, m = step(params, (), batch, w, jax.random.fold_in(key, k))
+        kk = jax.random.fold_in(key, k)
+        sys_col = ""
+        if state is not None:
+            state, trace = state_step(state, kk, jnp.arange(fl.n_clients))
+            params, _, m = step(params, (), batch, w, kk, trace)
+            sys_col = (f"sel {int(m.selected_clients)} "
+                       f"miss {int(m.deadline_misses)} drop {int(m.dropouts)} ")
+        else:
+            params, _, m = step(params, (), batch, w, kk)
         loss = float(m.loss)
         total_bits += round_bits(fl, dim, m.mask)
         print(f"[round {k:3d}] loss {loss:.4f} alpha {float(m.alpha):.3f} "
               f"gamma {float(m.gamma):.3f} sent {int(m.sent_clients)}/{fl.n_clients} "
-              f"bits {total_bits/1e9:.2f}G ({time.time()-t0:.1f}s)")
+              f"{sys_col}bits {total_bits/1e9:.2f}G ({time.time()-t0:.1f}s)")
     if args.checkpoint:
         save(args.checkpoint, params, step=args.rounds)
         print(f"[train] checkpoint saved to {args.checkpoint}")

@@ -4,7 +4,9 @@ Layers the multi-round experiment machinery of the paper's Sec. 4 evaluation
 on top of the single-round ``RoundEngine`` stack:
 
 * :mod:`repro.sim.pool`      — device-resident :class:`ClientPool` serving
-  round cohorts via a double-buffered host→device prefetch pipeline;
+  round cohorts via a double-buffered host→device prefetch pipeline, plus
+  the client-state layer (:class:`ClientState`/:class:`SystemConfig`):
+  Markov availability chains, deadlines, dropout fault injection;
 * :mod:`repro.sim.scenarios` — the named scenario registry encoding the
   paper's experiment grid;
 * :mod:`repro.sim.driver`    — the multi-round driver (host / prefetch /
@@ -19,7 +21,15 @@ from repro.sim.driver import (  # noqa: F401
     run_simulation,
     validate_ledger,
 )
-from repro.sim.pool import ClientPool, RoundPlan, plan_cohort  # noqa: F401
+from repro.sim.pool import (  # noqa: F401
+    ClientPool,
+    ClientState,
+    RoundPlan,
+    SystemConfig,
+    init_client_state,
+    plan_cohort,
+    step_client_state,
+)
 from repro.sim.scenarios import (  # noqa: F401
     SCENARIOS,
     Scenario,

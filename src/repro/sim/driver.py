@@ -33,12 +33,27 @@ itself — produces **bitwise-identical per-round participation masks** (the
 parity gate in tests/test_sim.py; the batches match bitwise because
 ``plan_cohort`` replays ``sample_round_batches``'s RNG stream).
 
+A ``system`` argument (:class:`repro.sim.pool.SystemConfig`) switches on the
+client-state layer: a device-resident :class:`repro.sim.pool.ClientState`
+(Markov availability chains + latency scales over the whole dataset pool) is
+stepped once per round — in the host/prefetch loops as its own jitted step,
+in scan mode inside the ``lax.scan`` carry next to ``(params, opt_state)``
+— and the resulting per-cohort ``AvailabilityTrace`` rides into the round
+step, where ``ocs.sampling_plan`` rescales by each client's realized
+inclusion probability.  The state key stream is a disjoint fold of the same
+round keys, so masks stay bitwise identical across all three modes (and the
+mesh) for a fixed seed, and runs WITHOUT a system config are bit-for-bit
+what they were before the layer existed.
+
 Every run fills a :class:`SimLedger` — per-round loss / alpha / gamma / sent
-/ expected clients plus cumulative **uplink and downlink** bits
+/ expected clients, the system-layer counters (selected-before-attrition
+``over_selected``, ``deadline_misses``, ``dropouts`` — all zero without a
+``system``) plus cumulative **uplink and downlink** bits
 (``fl.round.round_bits_duplex``; downlink is reported separately because the
-paper's x-axis excludes broadcast, footnote 5) — serialised as a schema-1
+paper's x-axis excludes broadcast, footnote 5) — serialised as a schema-2
 JSON artifact (``validate_ledger`` is the contract both the tests and the
-``bench_sim --smoke`` CI gate assert).
+``bench_sim --smoke`` CI gate assert; schema 1 lacked the system-layer
+series).
 """
 
 from __future__ import annotations
@@ -55,7 +70,13 @@ import numpy as np
 
 from repro.fl.engine import RoundEngine, make_engine
 from repro.fl.round import client_weights, round_bits_duplex
-from repro.sim.pool import ClientPool, gather_batch, stack_plans
+from repro.sim.pool import (
+    ClientPool,
+    gather_batch,
+    init_client_state,
+    stack_plans,
+    step_client_state,
+)
 from repro.sim.scenarios import get_scenario
 
 
@@ -72,21 +93,25 @@ def build_client_mesh(fl, devices: int | None = None):
     shards = max(d for d in range(1, n_dev + 1) if fl.n_clients % d == 0)
     return jax.make_mesh((shards,), (fl.client_axis,))
 
-SIM_SCHEMA = 1
+SIM_SCHEMA = 2
 MODES = ("host", "prefetch", "scan")
 
-# per-round series every schema-1 ledger must carry, all the same length
+# per-round series every schema-2 ledger must carry, all the same length
+# (schema 1 lacked the three system-layer counters)
 LEDGER_SERIES = (
     "loss", "alpha", "gamma", "sent", "expected_clients",
+    "over_selected", "deadline_misses", "dropouts",
     "uplink_bits", "downlink_bits",
 )
 
 
 @dataclass
 class SimLedger:
-    """Structured metrics ledger of one simulation run (artifact schema 1).
+    """Structured metrics ledger of one simulation run (artifact schema 2).
 
-    Per-round series (``LEDGER_SERIES``) plus the eval curve
+    Per-round series (``LEDGER_SERIES``, including the system-layer counters
+    ``over_selected``/``deadline_misses``/``dropouts`` — zeros when the run
+    had no :class:`~repro.sim.pool.SystemConfig`) plus the eval curve
     (``acc_rounds``/``acc``, rectangular — no ``(round, value)`` tuples) and
     the run's throughput.  ``masks``/``norms`` are kept in memory for parity
     tests and are written to JSON only on request (``include_masks``).
@@ -101,6 +126,9 @@ class SimLedger:
     gamma: list = field(default_factory=list)
     sent: list = field(default_factory=list)
     expected_clients: list = field(default_factory=list)
+    over_selected: list = field(default_factory=list)    # pre-attrition draws
+    deadline_misses: list = field(default_factory=list)
+    dropouts: list = field(default_factory=list)
     uplink_bits: list = field(default_factory=list)      # cumulative
     downlink_bits: list = field(default_factory=list)    # cumulative
     acc_rounds: list = field(default_factory=list)
@@ -111,7 +139,7 @@ class SimLedger:
     rounds_per_sec: float = 0.0                          # steady-state (post-compile)
 
     def to_json(self, include_masks: bool = False) -> dict:
-        """The schema-1 artifact document (see :func:`validate_ledger`)."""
+        """The schema-2 artifact document (see :func:`validate_ledger`)."""
         doc = {
             "schema": SIM_SCHEMA,
             "scenario": self.scenario,
@@ -124,6 +152,9 @@ class SimLedger:
                 "gamma": self.gamma,
                 "sent": self.sent,
                 "expected_clients": self.expected_clients,
+                "over_selected": self.over_selected,
+                "deadline_misses": self.deadline_misses,
+                "dropouts": self.dropouts,
                 "uplink_bits": self.uplink_bits,
                 "downlink_bits": self.downlink_bits,
                 "acc_rounds": self.acc_rounds,
@@ -145,11 +176,14 @@ class SimLedger:
 
 
 def validate_ledger(doc: dict) -> None:
-    """Assert the schema-1 ledger contract; raises ``ValueError`` on breach.
+    """Assert the schema-2 ledger contract; raises ``ValueError`` on breach.
 
     The single source of truth for what a sim artifact must contain — the
     scenario-grid smoke test and the ``bench_sim --smoke`` CI step both call
-    this, so the schema cannot drift silently.
+    this, so the schema cannot drift silently.  Schema 2 adds the per-round
+    system-layer counters (``over_selected``, ``deadline_misses``,
+    ``dropouts``), length-checked with every other series and required to be
+    non-negative.
     """
     if doc.get("schema") != SIM_SCHEMA:
         raise ValueError(f"ledger schema {doc.get('schema')!r} != {SIM_SCHEMA}")
@@ -180,6 +214,9 @@ def validate_ledger(doc: dict) -> None:
             raise ValueError(f"ledger metrics lack the {series!r} series")
     if len(metrics["acc_rounds"]) != len(metrics["acc"]):
         raise ValueError("acc_rounds and acc series lengths differ")
+    for series in ("over_selected", "deadline_misses", "dropouts"):
+        if np.any(np.asarray(metrics[series], np.int64) < 0):
+            raise ValueError(f"negative counts in ledger series {series!r}")
     for series in ("uplink_bits", "downlink_bits"):
         if np.any(np.diff(np.asarray(metrics[series], np.int64)) < 0):
             raise ValueError(f"cumulative series {series!r} decreases")
@@ -204,6 +241,7 @@ def run_simulation(
     local_epoch: bool = True,
     server_opt=None,
     mesh=None,
+    system=None,
     scenario_name: str | None = None,
     artifact: str | None = None,
 ) -> tuple:
@@ -218,10 +256,19 @@ def run_simulation(
     engines' sampling math and compression subkeys).  ``fl.weights ==
     'data_size'`` takes each cohort's slice of ``dataset.sizes()``
     (normalized per round) — the legacy loop silently dropped it.
+    ``system`` (a :class:`~repro.sim.pool.SystemConfig`) switches on the
+    client-state layer (module docstring): mutually exclusive with the
+    scalar ``fl.availability < 1`` path, since the trace generalizes it.
     ``artifact`` (a path) serialises the ledger on completion.
     """
     if mode not in MODES:
         raise ValueError(f"unknown sim mode {mode!r}; want one of {MODES}")
+    if system is not None and fl.availability < 1.0:
+        raise ValueError(
+            "system config and scalar fl.availability < 1 are mutually "
+            "exclusive: the availability trace generalizes Appendix E's "
+            "Bernoulli(q) — encode q as SystemConfig(p_up=q, p_down=1-q)"
+        )
     if fl.n_clients > dataset.n_clients:
         raise ValueError(
             f"FLConfig.n_clients={fl.n_clients} exceeds the dataset's client "
@@ -254,6 +301,17 @@ def run_simulation(
     params = init_fn(jax.random.fold_in(key, 1))
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
     opt_state = server_opt.init(params) if server_opt is not None else ()
+    # client-state layer: chains over the WHOLE dataset pool, initialised at
+    # stationarity from a dedicated fold (the params fold is 1, rounds are
+    # 1000+k — fold 2 is untouched on every pre-existing path).
+    state = None
+    if system is not None:
+        state = init_client_state(
+            dataset.n_clients, system, jax.random.fold_in(key, 2)
+        )
+        state_step = jax.jit(
+            lambda st, kk, c: step_client_state(st, kk, c, system)
+        )
     sizes = np.asarray(dataset.sizes())
     uniform_w = client_weights(fl)
 
@@ -284,9 +342,16 @@ def run_simulation(
                 rng, clients, fl.local_steps, batch_size, local_epoch
             )
             batch = {bk: jnp.asarray(v) for bk, v in batch.items()}
-            params, opt_state, metrics = round_step(
-                params, opt_state, batch, w, jax.random.fold_in(key, 1000 + k)
-            )
+            kk = jax.random.fold_in(key, 1000 + k)
+            if state is not None:
+                state, trace = state_step(state, kk, jnp.asarray(clients))
+                params, opt_state, metrics = round_step(
+                    params, opt_state, batch, w, kk, trace
+                )
+            else:
+                params, opt_state, metrics = round_step(
+                    params, opt_state, batch, w, kk
+                )
             dev_metrics.append(metrics)
             if want_eval(k):
                 dev_evals.append((k, eval_fn(params, eval_batch)))
@@ -301,21 +366,36 @@ def run_simulation(
         round_step = jax.jit(step_factory(), donate_argnums=(0, 1))
 
         def draw_round(k):
+            # called strictly in round order, so the client-state chain
+            # advances round by round even though round k+1's draw (and its
+            # state step) is dispatched while round k still computes.
+            nonlocal state
             clients = draw_cohort()
             plan = cpool.plan(rng, clients, fl.local_steps, batch_size, local_epoch)
-            return plan, cohort_weights(clients), jax.random.fold_in(key, 1000 + k)
+            kk = jax.random.fold_in(key, 1000 + k)
+            trace = None
+            if state is not None:
+                state, trace = state_step(state, kk, jnp.asarray(plan.clients))
+            return plan, cohort_weights(clients), kk, trace
 
         cur = draw_round(0)
         cur_batch = cpool.gather(cur[0])
         for k in range(rounds):
-            plan, w, kk = cur
+            plan, w, kk, trace = cur
             batch = cur_batch
             if k + 1 < rounds:
                 # double buffering: round k+1's plan is drawn and its gather
                 # dispatched while round k's step is still executing.
                 cur = draw_round(k + 1)
                 cur_batch = cpool.gather(cur[0])
-            params, opt_state, metrics = round_step(params, opt_state, batch, w, kk)
+            if trace is None:
+                params, opt_state, metrics = round_step(
+                    params, opt_state, batch, w, kk
+                )
+            else:
+                params, opt_state, metrics = round_step(
+                    params, opt_state, batch, w, kk, trace
+                )
             dev_metrics.append(metrics)
             if want_eval(k):
                 dev_evals.append((k, eval_fn(params, eval_batch)))
@@ -327,22 +407,34 @@ def run_simulation(
     else:  # scan-over-rounds
         cpool = ClientPool(dataset)
         step_fn = step_factory()
+        use_state = state is not None
+        if not use_state:
+            state = ()  # empty carry slot; scanned next to (params, opt_state)
 
-        def chunk_fn(buffers, params, opt_state, clients_s, take_s, smask_s,
-                     w_s, keys_s):
+        def chunk_fn(buffers, params, opt_state, st, clients_s, take_s,
+                     smask_s, w_s, keys_s):
             def body(carry, xs):
-                p, o = carry
+                p, o, s = carry
                 c, t, sm, w, kk = xs
-                p, o, m = step_fn(p, o, gather_batch(buffers, c, t, sm), w, kk)
-                return (p, o), m
+                if use_state:
+                    # the client-state chain lives in the scan carry: same
+                    # step_client_state, same per-round key fold as the
+                    # host/prefetch jitted state step — bitwise identical.
+                    s, trace = step_client_state(s, kk, c, system)
+                    p, o, m = step_fn(
+                        p, o, gather_batch(buffers, c, t, sm), w, kk, trace
+                    )
+                else:
+                    p, o, m = step_fn(p, o, gather_batch(buffers, c, t, sm), w, kk)
+                return (p, o, s), m
 
-            (params, opt_state), ms = jax.lax.scan(
-                body, (params, opt_state),
+            (params, opt_state, st), ms = jax.lax.scan(
+                body, (params, opt_state, st),
                 (clients_s, take_s, smask_s, w_s, keys_s),
             )
-            return params, opt_state, ms
+            return params, opt_state, st, ms
 
-        chunk = jax.jit(chunk_fn, donate_argnums=(1, 2))
+        chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3))
         done = 0
         while done < rounds:
             span = min(rounds_per_scan, rounds - done)
@@ -364,8 +456,8 @@ def run_simulation(
                 w_s.append(cohort_weights(clients))
                 keys_s.append(jax.random.fold_in(key, 1000 + k))
             clients_s, take_s, smask_s = stack_plans(plans)
-            params, opt_state, ms = chunk(
-                cpool.buffers, params, opt_state,
+            params, opt_state, state, ms = chunk(
+                cpool.buffers, params, opt_state, state,
                 jnp.asarray(clients_s), jnp.asarray(take_s), jnp.asarray(smask_s),
                 jnp.stack(w_s), jnp.stack(keys_s),
             )
@@ -404,10 +496,16 @@ def run_simulation(
                 {"mesh_axis_size": int(np.prod(mesh.devices.shape))}
                 if mesh is not None else {}
             ),
+            **(
+                {"system": dataclasses.asdict(system)}
+                if system is not None else {}
+            ),
         },
     )
     losses, alphas, gammas = rows("loss"), rows("alpha"), rows("gamma")
     sents, expected = rows("sent_clients"), rows("expected_clients")
+    selected = rows("selected_clients")
+    misses, drops = rows("deadline_misses"), rows("dropouts")
     masks, norms = rows("mask"), rows("norms")
     up_total = down_total = 0
     for k in range(rounds):
@@ -419,6 +517,9 @@ def run_simulation(
         ledger.gamma.append(float(gammas[k]))
         ledger.sent.append(int(sents[k]))
         ledger.expected_clients.append(float(expected[k]))
+        ledger.over_selected.append(int(selected[k]))
+        ledger.deadline_misses.append(int(misses[k]))
+        ledger.dropouts.append(int(drops[k]))
         ledger.uplink_bits.append(up_total)
         ledger.downlink_bits.append(down_total)
         ledger.masks.append(masks[k].astype(bool))
@@ -454,8 +555,10 @@ def run_scenario(
     the scenario-grid smoke path), then delegates to :func:`run_simulation`.
     ``Scenario.sharded`` cells (and an explicit ``mesh``) run the shard_map
     round with the sharded client pool — when the cell is sharded and no mesh
-    is passed, :func:`build_client_mesh` spans the local devices.  Returns
-    ``(params, SimLedger)``.
+    is passed, :func:`build_client_mesh` spans the local devices.
+    ``Scenario.system`` cells thread their
+    :class:`~repro.sim.pool.SystemConfig` into the client-state layer.
+    Returns ``(params, SimLedger)``.
     """
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if reduced:
@@ -473,6 +576,6 @@ def run_scenario(
     return run_simulation(
         ds, init_fn, loss_fn, sc.fl, rounds if rounds is not None else sc.rounds,
         batch_size=sc.batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
-        seed=sc.seed if seed is None else seed, mesh=mesh,
+        seed=sc.seed if seed is None else seed, mesh=mesh, system=sc.system,
         scenario_name=sc.name, artifact=artifact,
     )

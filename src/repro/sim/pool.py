@@ -41,12 +41,23 @@ the sampling masks) is untouched — sharding only changes WHERE rows live.
 
 from __future__ import annotations
 
+import math
+from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.ocs import AvailabilityTrace
+
+# fold constant deriving the client-state key from the round key.  The round
+# engines consume the round key as ``k_sample, k_comp = split(key)``; folding
+# a fixed constant instead gives the state layer a stream disjoint from both,
+# so adding system realism never perturbs the sampling/compression draws
+# (the bit-for-bit scalar-path regression gate relies on this).
+STATE_FOLD = 7
 
 
 class RoundPlan(NamedTuple):
@@ -222,6 +233,141 @@ class ClientPool:
             jnp.asarray(plan.take),
             jnp.asarray(plan.step_mask),
         )
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    """System-realism knobs for the client-state layer (ISSUE 7 tentpole).
+
+    ``p_up``/``p_down`` drive each client's two-state Markov availability
+    chain (P(down->up) and P(up->down)); its stationary distribution is
+    ``pi = p_up / (p_up + p_down)``, and the Appendix-E i.i.d. Bernoulli(q)
+    model is the exact degenerate case ``p_up = q, p_down = 1 - q`` (the
+    chain transition then ignores the current state bit-for-bit — see
+    :func:`step_client_state`).  ``latency_mu``/``latency_sigma`` give every
+    client a fixed lognormal latency scale; each round's report time is an
+    Exponential draw at that scale, and a client selected by the plan misses
+    the round iff its draw exceeds ``deadline`` (None = no deadline).
+    ``drop_prob`` injects mid-round dropout faults, i.i.d. per client per
+    round.  All fields are plain Python floats so a config can close over a
+    jitted state step statically.
+    """
+
+    p_up: float = 1.0        # P(down -> up) per round
+    p_down: float = 0.0      # P(up -> down) per round
+    latency_mu: float = 0.0      # lognormal location of the per-client scale
+    latency_sigma: float = 0.0   # lognormal spread (0 = homogeneous clients)
+    deadline: float | None = None  # round deadline in latency units
+    drop_prob: float = 0.0   # mid-round dropout probability
+
+    def __post_init__(self):
+        for name in ("p_up", "p_down", "drop_prob"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.drop_prob >= 1.0:
+            raise ValueError("drop_prob must be < 1 (some client must survive)")
+        if self.deadline is not None and self.deadline <= 0.0:
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+        if self.latency_sigma < 0.0:
+            raise ValueError(f"latency_sigma must be >= 0, got {self.latency_sigma}")
+
+    def stationary(self) -> float:
+        """Stationary up-probability ``pi = p_up / (p_up + p_down)``.
+
+        The chain's long-run availability marginal; 1.0 for the frozen
+        all-up chain (``p_up = p_down = 0``, the no-dynamics default)."""
+        s = self.p_up + self.p_down
+        return self.p_up / s if s > 0.0 else 1.0
+
+
+class ClientState(NamedTuple):
+    """Device-resident per-client system state, scanned with the round loop.
+
+    Lives alongside :class:`ClientPool` over the same ``(pool,)`` client
+    axis: ``up`` is the Markov availability chain's current state
+    (initialised at stationarity so every round's marginal up-probability is
+    exactly ``SystemConfig.stationary()``), ``lat_scale`` the client's fixed
+    lognormal latency scale.  A plain pytree of arrays, so it threads
+    through ``lax.scan`` carries unchanged — the scan-over-rounds driver
+    mode carries it next to ``(params, opt_state)``.
+    """
+
+    up: jax.Array         # (pool,) bool — chain state entering the next round
+    lat_scale: jax.Array  # (pool,) f32 — per-client mean report latency
+
+
+def init_client_state(n: int, cfg: SystemConfig, key: jax.Array) -> ClientState:
+    """Initialise the chain at stationarity and draw latency scales.
+
+    ``up ~ Bernoulli(pi)`` with ``pi = p_up/(p_up+p_down)`` and
+    ``lat_scale = exp(latency_mu + latency_sigma * N(0,1))`` per client —
+    both deterministic in ``key``."""
+    k_up, k_lat = jax.random.split(key)
+    up = jax.random.uniform(k_up, (n,)) < cfg.stationary()
+    lat_scale = jnp.exp(
+        cfg.latency_mu + cfg.latency_sigma * jax.random.normal(k_lat, (n,))
+    ).astype(jnp.float32)
+    return ClientState(up=up, lat_scale=lat_scale)
+
+
+def step_client_state(
+    state: ClientState, round_key: jax.Array, clients: jax.Array, cfg: SystemConfig
+) -> tuple[ClientState, AvailabilityTrace]:
+    """Advance every chain one round and emit the cohort's availability trace.
+
+    Deterministic in ``round_key``: all randomness comes from
+    ``fold_in(round_key, STATE_FOLD)`` — a stream disjoint from the round
+    engines' ``split(key)`` sampling/compression keys, so the engines' own
+    draws are untouched.  The chain transition is written as a single
+    uniform threshold per client, ``up' = u >= p_down`` if up else
+    ``u >= 1 - p_up``: when ``p_up + p_down = 1`` (the Appendix-E degenerate
+    case ``p_up = q``) both thresholds coincide and the next state is the
+    i.i.d. Bernoulli(q) draw ``u >= 1 - q`` regardless of the current state
+    — the recovery is bitwise, not just in distribution.  Latency is an
+    Exponential draw at each client's fixed scale compared against
+    ``cfg.deadline``; dropout is an i.i.d. Bernoulli fault.  The returned
+    trace is gathered down to the round's cohort ``clients`` and carries
+    each client's analytic ``include_prob = pi * P(on_time) * (1 - drop_prob)``
+    so :func:`repro.core.ocs.sampling_plan` keeps the Eq. 2 estimator
+    unbiased over the whole system process.
+    """
+    n = state.up.shape[0]
+    k = jax.random.fold_in(round_key, STATE_FOLD)
+    k_up, k_lat, k_drop = jax.random.split(k, 3)
+    u = jax.random.uniform(k_up, (n,))
+    up = jnp.where(state.up, u >= cfg.p_down, u >= 1.0 - cfg.p_up)
+    if cfg.deadline is None:
+        on_time = jnp.ones((n,), bool)
+        p_on = jnp.ones((n,), jnp.float32)
+    else:
+        lat = state.lat_scale * jax.random.exponential(k_lat, (n,))
+        on_time = lat <= cfg.deadline
+        p_on = 1.0 - jnp.exp(-cfg.deadline / jnp.maximum(state.lat_scale, 1e-12))
+    if cfg.drop_prob > 0.0:
+        kept = jax.random.uniform(k_drop, (n,)) >= cfg.drop_prob
+    else:
+        kept = jnp.ones((n,), bool)
+    include = (cfg.stationary() * (1.0 - cfg.drop_prob)) * p_on
+    c = jnp.asarray(clients)
+    trace = AvailabilityTrace(
+        up=up[c], on_time=on_time[c], kept=kept[c],
+        include_prob=include[c].astype(jnp.float32),
+    )
+    return ClientState(up=up, lat_scale=state.lat_scale), trace
+
+
+def expected_survivors(cfg: SystemConfig, m: int, over_select: float = 1.0) -> float:
+    """Back-of-envelope E[#reporting clients] for an over-selected plan.
+
+    ``round(m * over_select) * pi * P(on_time at the median latency scale)
+    * (1 - drop_prob)`` — a planning aid for picking ``over_select`` in
+    scenario cells, not part of the estimator math."""
+    m_eff = max(1, int(round(m * over_select)))
+    p_on = 1.0
+    if cfg.deadline is not None:
+        p_on = 1.0 - math.exp(-cfg.deadline / math.exp(cfg.latency_mu))
+    return m_eff * cfg.stationary() * p_on * (1.0 - cfg.drop_prob)
 
 
 def stack_plans(plans):

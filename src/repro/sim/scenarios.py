@@ -21,6 +21,7 @@ import dataclasses
 from dataclasses import dataclass, field
 
 from repro.configs.base import FLConfig
+from repro.sim.pool import SystemConfig
 
 
 @dataclass(frozen=True)
@@ -32,7 +33,10 @@ class Scenario:
     records the section/figure the cell reproduces.  ``sharded`` cells run
     the shard_map round over a client mesh (``run_scenario`` builds one over
     the local devices via ``build_client_mesh``) with the sharded
-    ``ClientPool`` — the mesh column of the experiment grid.
+    ``ClientPool`` — the mesh column of the experiment grid.  ``system``
+    cells (a :class:`~repro.sim.pool.SystemConfig`) run under the
+    client-state layer: Markov availability chains, round deadlines with
+    over-selection, mid-round dropout — the system-realism column.
     """
 
     name: str
@@ -44,6 +48,7 @@ class Scenario:
     seed: int = 1
     paper: str = ""
     sharded: bool = False
+    system: SystemConfig | None = None
     dataset_kw: dict = field(default_factory=dict)
 
     def with_(self, **kw) -> "Scenario":
@@ -240,6 +245,91 @@ def _build_grid():
         fl=_fl(availability=0.7, compression="natural"),
         sharded=True,
         paper="Appendix E x natural compression on the shard_map round",
+    ))
+    # --- system-realism column (ISSUE 7): the client-state layer ----------
+    # Markov availability chains (stationary pi = p_up/(p_up+p_down) = 0.7,
+    # sticky: mixing rate 0.5), the degenerate chain that IS Appendix E's
+    # i.i.d. Bernoulli(0.7), round deadlines with over-selection, mid-round
+    # dropout faults, and the fully adversarial straggler combination.
+    markov = SystemConfig(p_up=0.35, p_down=0.15)
+    bernoulli_q = SystemConfig(p_up=0.7, p_down=0.3)  # degenerate: i.i.d. q=0.7
+    deadline = SystemConfig(latency_mu=0.0, latency_sigma=0.75, deadline=2.0)
+    dropout = SystemConfig(drop_prob=0.15)
+    straggler = SystemConfig(p_up=0.35, p_down=0.15, latency_mu=0.0,
+                             latency_sigma=1.0, deadline=2.0, drop_prob=0.1)
+    register(Scenario(
+        name="femnist1-fedavg-aocs-markov",
+        dataset="femnist1", fl=_fl(), system=markov,
+        paper="Appendix E generalized: correlated Markov availability (pi=0.7)",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-markov-iid",
+        dataset="femnist1", fl=_fl(), system=bernoulli_q,
+        paper="Appendix E via the degenerate chain (i.i.d. Bernoulli q=0.7)",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-deadline",
+        dataset="femnist1", fl=_fl(over_select=1.5), system=deadline,
+        paper="system realism: round deadline + 1.5x over-selection",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-uniform-deadline",
+        dataset="femnist1",
+        fl=_fl(sampler="uniform", lr_local=0.03125, over_select=1.5),
+        system=deadline,
+        paper="system realism: deadline cell, uniform-sampling baseline",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-dropout",
+        dataset="femnist1", fl=_fl(), system=dropout,
+        paper="system realism: mid-round dropout fault injection (15%)",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-straggler",
+        dataset="femnist1", fl=_fl(over_select=2.0), system=straggler,
+        paper="system realism: Markov chains x deadline x dropout, 2x over-selection",
+    ))
+    register(Scenario(
+        name="femnist2-fedavg-aocs-markov",
+        dataset="femnist2", fl=_fl(), system=markov,
+        paper="Markov availability on FEMNIST dataset 2",
+    ))
+    register(Scenario(
+        name="charlm-fedavg-aocs-dropout",
+        dataset="charlm",
+        fl=_fl(expected_clients=2, local_steps=6, lr_local=1.0),
+        batch_size=8, system=dropout,
+        paper="mid-round dropout on the Shakespeare-like char LM",
+    ))
+    register(Scenario(
+        name="cifar-fedavg-aocs-deadline",
+        dataset="cifar",
+        fl=_fl(local_steps=5, lr_local=0.0625, over_select=1.5),
+        system=deadline,
+        paper="deadline + over-selection on the balanced-pool control",
+    ))
+    register(Scenario(
+        name="femnist1-dsgd-optimal-markov",
+        dataset="femnist1",
+        fl=_fl(algorithm="dsgd", sampler="optimal", local_steps=1,
+               lr_local=0.0625, lr_global=0.5),
+        system=markov,
+        paper="Sec. 4.1 DSGD (exact Eq. 7) under Markov availability",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-straggler-scan",
+        dataset="femnist1",
+        fl=_fl(round_engine="scan", scan_group=4, cache_groups=4,
+               over_select=2.0),
+        system=straggler,
+        paper="straggler cell on the single-pass scan engine",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-aocs-straggler-shard",
+        dataset="femnist1",
+        fl=_fl(agg_backend="pallas", over_select=2.0),
+        system=straggler, sharded=True,
+        paper="straggler cell on the shard_map round (trace replicated)",
     ))
 
 

@@ -8,6 +8,13 @@ and the shard-compression tests all consume it — one matrix, one oracle, so
 a new engine axis (or a new compressor) extends parity coverage in one
 place.
 
+Since the client-state layer the matrix also sweeps ``trace-*`` variants:
+an :class:`repro.core.ocs.AvailabilityTrace` drawn from one
+``step_client_state`` step (Markov chains / deadlines+over-selection /
+dropout) is threaded through every combo's ``round_step(..., trace)``, so
+the trace path earns the same bitwise-mask guarantee as the scalar
+Appendix-E ``availability`` path — shard combos included.
+
 Shard combos build their mesh over the live device set (largest divisor of
 ``n_clients``): 1 device in the plain tier-1 run, 4 in the CI ``shard-smoke``
 job (``XLA_FLAGS=--xla_force_host_platform_device_count=4``), so the same
@@ -26,7 +33,11 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # --- the engine-parity matrix -------------------------------------------
 
 # fl-config variants swept over every engine combo: compression kinds
-# (incl. the mesh path since PR 5) x partial availability (Appendix E).
+# (incl. the mesh path since PR 5) x partial availability (Appendix E)
+# x availability-trace variants (client-state layer).  The ``_system`` key
+# is NOT an FLConfig field — it selects the SystemConfig whose one-step
+# trace :func:`parity_trace` threads through the combo (stripped by
+# :func:`parity_fl`).
 PARITY_VARIANTS = {
     "plain": {},
     "randk": {"compression": "randk", "compression_param": 0.5},
@@ -35,6 +46,15 @@ PARITY_VARIANTS = {
     "avail": {"availability": 0.7},
     "randk+avail": {"compression": "randk", "compression_param": 0.5,
                     "availability": 0.7},
+    "trace-markov": {"_system": {"p_up": 0.6, "p_down": 0.4}},
+    "trace-deadline": {"over_select": 2.0,
+                       "_system": {"latency_sigma": 0.75, "deadline": 2.0}},
+    "trace-dropout": {"_system": {"p_up": 0.6, "p_down": 0.2,
+                                  "drop_prob": 0.25}},
+    "randk+trace": {"compression": "randk", "compression_param": 0.5,
+                    "_system": {"p_up": 0.6, "p_down": 0.4,
+                                "latency_sigma": 0.5, "deadline": 3.0,
+                                "drop_prob": 0.1}},
 }
 
 # (engine, agg_backend, cache_groups): vmap combos, scan combos at every
@@ -52,12 +72,33 @@ PARITY_ORACLE = ("vmap", "jnp", None)
 
 def parity_fl(variant: str, **kw):
     """The matrix's FLConfig for one variant (n=8 so every mesh size that
-    divides 8 — 1, 2, 4, 8 emulated devices — can shard it)."""
+    divides 8 — 1, 2, 4, 8 emulated devices — can shard it).  Non-FLConfig
+    keys (``_system``) are stripped — :func:`parity_trace` consumes them."""
     from repro.configs.base import FLConfig
 
+    merged = {**PARITY_VARIANTS[variant], **kw}
+    merged.pop("_system", None)
     return FLConfig(n_clients=8, expected_clients=3, sampler="aocs",
-                    local_steps=2, lr_local=0.1,
-                    **{**PARITY_VARIANTS[variant], **kw})
+                    local_steps=2, lr_local=0.1, **merged)
+
+
+def parity_trace(variant: str, fl, key):
+    """The variant's AvailabilityTrace (None for non-trace variants), drawn
+    exactly as the sim driver draws it: client state initialised from
+    ``fold_in(key, 2)``, one ``step_client_state`` keyed on the round key
+    over the full client pool."""
+    sys_kw = PARITY_VARIANTS[variant].get("_system")
+    if sys_kw is None:
+        return None
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sim.pool import SystemConfig, init_client_state, step_client_state
+
+    cfg = SystemConfig(**sys_kw)
+    state = init_client_state(fl.n_clients, cfg, jax.random.fold_in(key, 2))
+    _, trace = step_client_state(state, key, jnp.arange(fl.n_clients), cfg)
+    return trace
 
 
 def parity_workload(n=8, din=12, classes=3, steps=2, b=4, seed=1):
@@ -87,12 +128,13 @@ def parity_mesh(fl):
 
 
 def run_parity_combo(engine, backend, cache_groups, loss, fl, params, batch,
-                     weights, key):
+                     weights, key, trace=None):
     """Execute one matrix combo's round step; returns (params', opt, metrics).
 
     ``engine='shard'`` runs the shard_map round via ``make_engine(mesh=...)``
     on :func:`parity_mesh`; the single-device engines run through
-    :class:`RoundEngine` with ``scan_group=4``.
+    :class:`RoundEngine` with ``scan_group=4``.  A non-None ``trace`` rides
+    the client-state path (``round_step(..., trace)``) on every engine.
     """
     import dataclasses
 
@@ -108,4 +150,4 @@ def run_parity_combo(engine, backend, cache_groups, loss, fl, params, batch,
             RoundEngine(loss, fl, memory=engine, backend=backend,
                         scan_group=4, cache_groups=cache_groups).make_step()
         )
-    return step(params, (), batch, weights, key)
+    return step(params, (), batch, weights, key, trace)

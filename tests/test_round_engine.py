@@ -17,6 +17,7 @@ from conftest import (
     PARITY_ORACLE,
     PARITY_VARIANTS,
     parity_fl,
+    parity_trace,
     parity_workload,
     run_parity_combo,
 )
@@ -37,15 +38,19 @@ def test_engine_matrix_parity(variant):
     """Same key => identical masks/norms/probs, equal round_bits_duplex and
     allclose params across the WHOLE matrix — single-pass scan at every cache
     regime and the shard_map round included (acceptance criterion of the
-    engine refactors and of the mesh-compression PR)."""
+    engine refactors and of the mesh-compression PR).  The ``trace-*``
+    variants additionally thread a client-state AvailabilityTrace through
+    every combo (the system-realism PR's acceptance criterion)."""
     init, loss, batch = parity_workload()
     fl = parity_fl(variant)
     params = init(jax.random.PRNGKey(0))
     w = client_weights(fl)
     key = jax.random.PRNGKey(7)
+    trace = parity_trace(variant, fl, key)
     dim = sum(x.size for x in jax.tree_util.tree_leaves(params))
     outs = {
-        combo: run_parity_combo(*combo, loss, fl, params, batch, w, key)
+        combo: run_parity_combo(*combo, loss, fl, params, batch, w, key,
+                                trace=trace)
         for combo in PARITY_ENGINES
     }
     p_ref, _, m_ref = outs[PARITY_ORACLE]

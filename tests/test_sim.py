@@ -1,7 +1,9 @@
 """repro.sim subsystem: pool-gather bitwise parity with host batch assembly,
 driver-vs-legacy-loop mask parity across all execution modes (the acceptance
 gate of the trainer refactor), cohort-size validation, the data_size weights
-regression, the scenario-grid smoke, and the schema-1 ledger contract."""
+regression, the scenario-grid smoke, the schema-2 ledger contract, and the
+client-state layer's determinism regression (same seed => byte-identical
+straggler-cell ledger JSON in all three driver modes)."""
 
 import json
 
@@ -212,7 +214,7 @@ def test_scenario_grid_smoke():
     """Every registered scenario runs 2 reduced rounds end to end with finite
     loss and a schema-valid ledger (the ISSUE's grid acceptance check)."""
     names = list_scenarios()
-    assert len(names) >= 15  # the Sec. 4 grid is actually populated
+    assert len(names) >= 30  # Sec. 4 grid + the system-realism cells
     for name in names:
         _, led = run_scenario(name, reduced=True, mode="prefetch", rounds=2)
         assert np.all(np.isfinite(led.loss)), name
@@ -262,3 +264,110 @@ def test_sim_rejects_bad_mode(small_ds):
         run_simulation(small_ds, init, loss, fl, 1, mode="warp")
     with pytest.raises(ValueError, match="rounds_per_scan"):
         run_simulation(small_ds, init, loss, fl, 1, mode="scan", rounds_per_scan=0)
+
+
+# --- the client-state layer (system-realism PR) ---------------------------
+
+def _strip_timing(doc, mode_identity=False):
+    """Ledger JSON minus the wall-clock fields — everything that must be
+    byte-identical across repeat runs.  ``mode_identity=True`` also drops
+    the fields that legitimately name the execution policy (``mode`` and
+    the mode-specific workload keys), leaving what must additionally be
+    byte-identical ACROSS driver modes."""
+    doc = json.loads(json.dumps(doc))
+    doc.pop("wall_s", None)
+    doc.pop("rounds_per_sec", None)
+    if mode_identity:
+        doc.pop("mode", None)
+        for k in ("pool_bytes", "rounds_per_scan"):
+            doc.get("workload", {}).pop(k, None)
+    return doc
+
+
+def test_straggler_cell_deterministic_across_modes():
+    """Determinism regression (ISSUE 7 satellite): the same seed produces a
+    byte-identical ledger JSON — masks included, timing excluded — for a
+    straggler cell in ALL three driver modes, so the client-state chain,
+    deadline and dropout draws are a pure function of the seed everywhere."""
+    docs, reps = {}, {}
+    for mode in MODES:
+        _, led = run_scenario("femnist1-fedavg-aocs-straggler", reduced=True,
+                              mode=mode, rounds=4, rounds_per_scan=2, seed=11)
+        validate_ledger(led.to_json())
+        docs[mode] = json.dumps(_strip_timing(led.to_json(include_masks=True)),
+                                sort_keys=True)
+        _, led2 = run_scenario("femnist1-fedavg-aocs-straggler", reduced=True,
+                               mode=mode, rounds=4, rounds_per_scan=2, seed=11)
+        reps[mode] = json.dumps(_strip_timing(led2.to_json(include_masks=True)),
+                                sort_keys=True)
+    for mode in MODES:
+        assert docs[mode] == reps[mode], f"{mode}: same seed, different ledger"
+        same = json.dumps(_strip_timing(json.loads(docs[mode]),
+                                        mode_identity=True), sort_keys=True)
+        ref = json.dumps(_strip_timing(json.loads(docs["host"]),
+                                       mode_identity=True), sort_keys=True)
+        assert same == ref, f"{mode}: diverged from host"
+    # the system counters actually fired (this cell exists to exercise them)
+    doc = json.loads(docs["host"])
+    assert sum(doc["metrics"]["over_selected"]) > 0
+    assert all(v >= 0 for v in doc["metrics"]["deadline_misses"])
+    assert all(v >= 0 for v in doc["metrics"]["dropouts"])
+
+
+def test_straggler_shard_cell_matches_unsharded():
+    """The mesh leg of the straggler matrix: the sharded straggler cell's
+    masks AND system counters are bitwise identical to the same cell without
+    the mesh (the shard_map round threads the trace replicated)."""
+    name = "femnist1-fedavg-aocs-straggler-shard"
+    _, led = run_scenario(name, reduced=True, mode="prefetch", rounds=3)
+    validate_ledger(led.to_json())
+    unsharded = get_scenario(name).with_(sharded=False)
+    _, led2 = run_scenario(unsharded, reduced=True, mode="prefetch", rounds=3)
+    for k in range(3):
+        assert np.array_equal(np.asarray(led.masks[k]), np.asarray(led2.masks[k]))
+    assert led.over_selected == led2.over_selected
+    assert led.deadline_misses == led2.deadline_misses
+    assert led.dropouts == led2.dropouts
+
+
+def test_ledger_schema2_system_series(small_ds, tmp_path):
+    """validate_ledger's schema-2 additions: the system-counter series are
+    required, length-checked and sign-checked, and survive a JSON
+    round-trip."""
+    from repro.sim import SystemConfig
+
+    init, loss, _ = _model(small_ds)
+    fl = FLConfig(n_clients=8, expected_clients=3, local_steps=1, lr_local=0.1,
+                  over_select=1.5)
+    system = SystemConfig(p_up=0.6, p_down=0.3, latency_sigma=0.5,
+                          deadline=2.0, drop_prob=0.2)
+    path = str(tmp_path / "run.json")
+    _, led = run_simulation(
+        small_ds, init, loss, fl, 3, batch_size=4, mode="host", seed=1,
+        system=system, artifact=path,
+    )
+    doc = json.load(open(path))
+    validate_ledger(doc)
+    assert doc["workload"]["system"]["drop_prob"] == 0.2
+    for series in ("over_selected", "deadline_misses", "dropouts"):
+        assert len(doc["metrics"][series]) == 3, series
+        bad = json.loads(json.dumps(doc))
+        del bad["metrics"][series]
+        with pytest.raises(ValueError, match=series):
+            validate_ledger(bad)
+        bad = json.loads(json.dumps(doc))
+        bad["metrics"][series][0] = -1
+        with pytest.raises(ValueError, match="negative"):
+            validate_ledger(bad)
+
+
+def test_sim_rejects_system_with_scalar_availability(small_ds):
+    """fl.availability < 1 and a SystemConfig are two models of the same
+    thing — the driver refuses the ambiguous combination."""
+    from repro.sim import SystemConfig
+
+    init, loss, _ = _model(small_ds)
+    fl = FLConfig(n_clients=8, expected_clients=3, availability=0.7)
+    with pytest.raises(ValueError, match="availability"):
+        run_simulation(small_ds, init, loss, fl, 1,
+                       system=SystemConfig(p_up=0.5, p_down=0.5))

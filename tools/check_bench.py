@@ -46,10 +46,14 @@ ROUND_ENGINE_COMBO_KEYS = {
 # engines, and the pallas combos compress inside the aggregate tile stream.
 ROUND_ENGINE_WORKLOAD_FLAGS = ("mask_parity", "fused_compression")
 
-SIM_SCHEMA = 2
+SIM_SCHEMA = 3
 SIM_MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s",
                  "sent_total"}
-SIM_MODES = ("host", "prefetch", "scan", "host+shard", "prefetch+shard")
+SIM_MODES = ("host", "prefetch", "scan", "host+shard", "prefetch+shard",
+             "host+straggler", "prefetch+straggler", "scan+straggler")
+# schema-3 straggler columns additionally carry the system-counter totals
+SIM_STRAGGLER_KEYS = {"over_selected_total", "deadline_misses_total",
+                      "dropouts_total"}
 
 
 def _load(path):
@@ -114,11 +118,16 @@ def check_sim(fresh: dict, baseline: dict) -> list[str]:
             if mode not in modes:
                 errs.append(f"{name}: mode {mode!r} missing")
                 continue
-            missing = SIM_MODE_KEYS - set(modes[mode])
+            want = SIM_MODE_KEYS | (
+                SIM_STRAGGLER_KEYS if mode.endswith("+straggler") else set())
+            missing = want - set(modes[mode])
             if missing:
                 errs.append(f"{name}: mode {mode} missing keys {sorted(missing)}")
             elif not modes[mode]["rounds_per_sec"] > 0:
                 errs.append(f"{name}: mode {mode} rounds_per_sec not positive")
+            elif mode.endswith("+straggler") and any(
+                    modes[mode][k] < 0 for k in SIM_STRAGGLER_KEYS):
+                errs.append(f"{name}: mode {mode} negative straggler counter")
     return errs
 
 

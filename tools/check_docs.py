@@ -29,7 +29,10 @@ ROOT = Path(__file__).resolve().parent.parent
 # (module, object or None for module docstring, required substrings)
 DOCSTRING_CONTRACT = [
     ("src/repro/core/ocs.py", None, ["Eq. 2", "Algorithm 1/2"]),
-    ("src/repro/core/ocs.py", "sampling_plan", ["Eq. 7", "Alg. 2", "Defs. 11/12"]),
+    ("src/repro/core/ocs.py", "sampling_plan", ["Eq. 7", "Alg. 2", "Defs. 11/12",
+                                                "AvailabilityTrace"]),
+    ("src/repro/core/ocs.py", "AvailabilityTrace", ["include_prob", "unbiased",
+                                                    "Appendix E"]),
     ("src/repro/core/ocs.py", "aggregate_updates", ["Eq. 2"]),
     ("src/repro/core/ocs.py", "sample_and_aggregate", ["mask_i * (w_i / p_i) * U_i"]),
     ("src/repro/core/sampling.py", "optimal_probabilities", ["Eq. (7)"]),
@@ -67,10 +70,15 @@ DOCSTRING_CONTRACT = [
                                      "NamedSharding", "psum_scatter"]),
     ("src/repro/sim/pool.py", "ClientPool", ["evice-resident", "harded"]),
     ("src/repro/sim/pool.py", "plan_cohort", ["sample_round_batches"]),
+    ("src/repro/sim/pool.py", "SystemConfig", ["Markov", "stationary",
+                                               "Bernoulli(q)"]),
+    ("src/repro/sim/pool.py", "ClientState", ["stationarity", "scan"]),
+    ("src/repro/sim/pool.py", "step_client_state", ["eterministic", "round",
+                                                    "include_prob", "bitwise"]),
     ("src/repro/sim/scenarios.py", None, ["Sec. 4", "experiment grid"]),
     ("src/repro/sim/driver.py", None, ["ledger", "schema", "uplink and downlink"]),
     ("src/repro/sim/driver.py", "run_simulation", ["bitwise", "mask"]),
-    ("src/repro/sim/driver.py", "validate_ledger", ["schema-1"]),
+    ("src/repro/sim/driver.py", "validate_ledger", ["schema-2", "deadline_misses"]),
 ]
 
 # modules whose every public top-level def/class must carry a docstring
@@ -109,6 +117,10 @@ ARCHITECTURE_MUSTS = [
     "Compression runs INSIDE the shard body", "Sharded pool gather",
     "psum_scatter", "NamedSharding", "no longer a limit",
     "honest remaining limits",
+    # the client-state layer (system realism): chain diagram, trace dataflow,
+    # deadline/over-selection semantics and the unbiasedness rescale
+    "Client-state layer", "p_up / (p_up + p_down)", "AvailabilityTrace",
+    "include_prob", "over-selection", "deadline", "dropout",
 ]
 # docs/paper_map.md must keep the Sec. 4 experiment-grid rows that bind the
 # paper's evaluation setup to the sim subsystem, plus the mesh-path rows.
@@ -117,6 +129,8 @@ PAPER_MAP_MUSTS = [
     "Sec. 4 — experiment grid", "Sec. 4 — multi-round evaluation loop",
     "mesh-sharded client pool", "compress_client_updates",
     "compress_norm_scale_aggregate",
+    # the Appendix-E generalization row: the Markov client-state layer
+    "Appendix E — generalized", "step_client_state", "AvailabilityTrace",
 ]
 # docs/benchmarks.md: the run recipe, the schema-4 field contract, and the
 # default-gating policy — enforced so the CI docs job catches drift between
@@ -127,6 +141,8 @@ BENCHMARKS_MUSTS = [
     "us_per_round", "pallas_interpret", "round_engine.json",
     "bench_sim", "sim.json", "rounds_per_sec",
     "host+shard", "prefetch+shard", "mesh_axis_size", "build_client_mesh",
+    # sim artifact schema 3: the straggler columns + system counters
+    "host+straggler", "deadline_misses_total", "over_selected_total",
 ]
 README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md"]
 
