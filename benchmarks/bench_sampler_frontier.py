@@ -1,0 +1,149 @@
+"""Cross-sampler frontier benchmark: loss vs cumulative uplink bits for every
+entry of the sampler zoo, on one scenario cell.
+
+The paper's central figure plots training progress against *client->master
+bits* (its x-axis, footnote 5) — OCS earns the same loss for fewer bits.
+This benchmark extends that figure across the whole sampler zoo
+(core/sampling.py::SAMPLERS): each sampler runs the SAME scenario cell
+(dataset, model, cohort budget, seed) through the sim driver, and the
+artifact records its per-round ``(loss, cumulative uplink bits)`` frontier
+plus the scalar summary the regression gate checks.
+
+Artifact: ``benchmarks/artifacts/sampler_frontier.json`` (schema 1, field
+contract in docs/benchmarks.md):
+
+  {"schema": 1, "scenario": ..., "workload": {...},
+   "samplers": {name: {"sampler", "loss": [...], "uplink_bits": [...],
+                       "final_loss", "total_uplink_bits", "sent_total",
+                       "rounds_per_sec"}}}
+
+``loss``/``uplink_bits`` are aligned per-round series (the frontier);
+``uplink_bits`` is cumulative hence non-decreasing.  Structural invariant
+(asserted here and by ``tools/check_bench.py --kind sampler_frontier``):
+no sampler bills more uplink than ``full`` participation — ``threshold``
+meets it with equality in the worst case (its cold-start round sends
+everyone and its overhead is zero).
+
+``--smoke`` runs the reduced cell and asserts the artifact contract (CI
+``bench-regression`` job, diffed against the committed CPU baseline via
+tools/check_bench.py); the full run regenerates the committed baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.sim.driver import run_scenario, validate_ledger
+from repro.sim.scenarios import get_scenario
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+SCHEMA = 1
+
+# every SAMPLERS entry rides the frontier (sorted; checked against the
+# registry at run time so the zoo cannot grow past this benchmark silently)
+FRONTIER_SAMPLERS = ("aocs", "clustered", "cyclic", "full", "optimal",
+                     "threshold", "uniform")
+
+# keys every per-sampler entry must carry (mirrored by tools/check_bench.py)
+SAMPLER_KEYS = {"sampler", "loss", "uplink_bits", "final_loss",
+                "total_uplink_bits", "sent_total", "rounds_per_sec"}
+
+
+def run(
+    scenario: str = "femnist1-fedavg-aocs",
+    rounds: int = 40,
+    seed: int = 0,
+    reduced: bool = False,
+    mode: str = "prefetch",
+    artifact: str = "sampler_frontier.json",
+):
+    """Run every zoo sampler over ``scenario``'s cell; writes the schema-1
+    artifact and returns the results dict.
+
+    The cell's FLConfig is reused verbatim except for ``sampler`` (one axis
+    moves, everything else — cohort budget m, local steps, learning rates,
+    dataset draw — is held fixed), so the frontiers are comparable.  Each
+    ledger passes :func:`validate_ledger`, and the artifact asserts the
+    structural invariant ``total_uplink_bits[s] <= total_uplink_bits[full]``
+    for every sampler before it is written.
+    """
+    from repro.core.sampling import SAMPLERS
+
+    assert set(FRONTIER_SAMPLERS) == set(SAMPLERS), (
+        "sampler zoo grew: extend FRONTIER_SAMPLERS (and the committed "
+        f"baseline) — registry {sorted(SAMPLERS)} vs {sorted(FRONTIER_SAMPLERS)}"
+    )
+    os.makedirs(ART, exist_ok=True)
+    base = get_scenario(scenario)
+    results = {"schema": SCHEMA, "scenario": scenario, "workload": None,
+               "samplers": {}}
+    for name in FRONTIER_SAMPLERS:
+        sc = base.with_(fl=dataclasses.replace(base.fl, sampler=name))
+        _, led = run_scenario(sc, reduced=reduced, mode=mode, rounds=rounds,
+                              seed=seed)
+        validate_ledger(led.to_json())
+        if results["workload"] is None:
+            results["workload"] = {**led.workload, "fl": led.fl,
+                                   "reduced": bool(reduced), "mode": mode}
+        entry = {
+            "sampler": name,
+            "loss": [float(x) for x in led.loss],
+            "uplink_bits": [int(x) for x in led.uplink_bits],
+            "final_loss": float(led.loss[-1]),
+            "total_uplink_bits": int(led.uplink_bits[-1]),
+            "sent_total": int(np.sum(led.sent)),
+            "rounds_per_sec": led.rounds_per_sec,
+        }
+        results["samplers"][name] = entry
+        csv_line(
+            f"frontier_{name}", entry["total_uplink_bits"],
+            f"loss={entry['final_loss']:.4f};sent={entry['sent_total']}"
+            f";rps={led.rounds_per_sec:.1f}",
+        )
+    # structural invariant: nothing on the frontier bills more than full
+    # participation (threshold's worst case — cold-start all-send with zero
+    # overhead — meets it with equality).
+    full_bits = results["samplers"]["full"]["total_uplink_bits"]
+    for name, entry in results["samplers"].items():
+        assert entry["total_uplink_bits"] <= full_bits, (
+            name, entry["total_uplink_bits"], full_bits,
+        )
+    with open(os.path.join(ART, artifact), "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def smoke():
+    """CI gate: reduced-cell frontier + schema-1 artifact contract.
+
+    Asserts the schema marker, the full sampler coverage, every entry's key
+    set, aligned finite frontier series with non-decreasing cumulative
+    uplink, and the full-participation bits ceiling.  Writes its own
+    (git-ignored) ``sampler_frontier_smoke.json`` so a smoke never clobbers
+    the committed CPU baseline.
+    """
+    res = run(rounds=6, reduced=True, artifact="sampler_frontier_smoke.json")
+    assert res["schema"] == SCHEMA, res["schema"]
+    assert set(res["samplers"]) == set(FRONTIER_SAMPLERS)
+    assert {"rounds", "batch_size", "pool_clients", "model_dim", "fl"} <= set(
+        res["workload"]
+    )
+    for name, entry in res["samplers"].items():
+        assert SAMPLER_KEYS <= set(entry), name
+        assert len(entry["loss"]) == len(entry["uplink_bits"]) > 0, name
+        assert np.all(np.isfinite(np.asarray(entry["loss"]))), name
+        assert np.all(np.diff(entry["uplink_bits"]) >= 0), name
+        assert entry["rounds_per_sec"] > 0, name
+        assert entry["sent_total"] > 0, name
+    print("sampler frontier bench smoke OK (schema 1)")
+
+
+if __name__ == "__main__":
+    smoke() if "--smoke" in sys.argv[1:] else run()

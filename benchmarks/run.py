@@ -29,6 +29,7 @@ def main() -> None:
         bench_kernels,
         bench_roofline,
         bench_round_engine,
+        bench_sampler_frontier,
         bench_shakespeare,
         bench_sim,
         bench_stepsize,
@@ -54,6 +55,11 @@ def main() -> None:
         "round_engine": lambda: bench_round_engine.run(reps=10 if args.full else 5),
         # sim-driver modes: host loop vs prefetched pool vs scan-over-rounds
         "sim": lambda: bench_sim.run(rounds=96 if args.full else 48),
+        # sampler zoo: loss-vs-cumulative-uplink-bits frontier per sampler
+        "sampler_frontier": lambda: (
+            bench_sampler_frontier.run(rounds=40)
+            if args.full else bench_sampler_frontier.smoke()
+        ),
         # deliverable (g): roofline table from dry-run artifacts
         "roofline": lambda: bench_roofline.run(),
     }

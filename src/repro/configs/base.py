@@ -202,7 +202,9 @@ class FLConfig:
     """Federated-round configuration (the paper's knobs)."""
     n_clients: int = 32            # n
     expected_clients: int = 6      # m
-    sampler: str = "aocs"          # optimal | aocs | uniform | full
+    # sampler zoo (core/sampling.py::SAMPLERS):
+    # optimal | aocs | uniform | full | clustered | cyclic | threshold
+    sampler: str = "aocs"
     j_max: int = 4                 # AOCS iterations
     local_steps: int = 1           # R (R=1 ~ DSGD on the local batch)
     algorithm: str = "fedavg"      # fedavg | dsgd

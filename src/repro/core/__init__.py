@@ -1,17 +1,28 @@
-"""Paper core: optimal client sampling (OCS/AOCS), improvement factors, bits.
+"""Paper core: the sampler zoo (OCS/AOCS + baselines), factors, bits.
 
 Public API:
-  sampling.optimal_probabilities  — exact Eq. (7)
-  sampling.aocs_probabilities     — Algorithm 2 (secure-aggregation friendly)
-  ocs.sample_and_aggregate        — one round of sampling + unbiased aggregation
-  improvement.improvement_factors — alpha^k, gamma^k (Defs. 11/12)
-  bits.BitsLedger                 — client->master uplink accounting
+  sampling.optimal_probabilities   — exact Eq. (7)
+  sampling.aocs_probabilities      — Algorithm 2 (secure-aggregation friendly)
+  sampling.clustered_probabilities — clustered baseline (arXiv 2105.05883)
+  sampling.cyclic_probabilities    — cyclic windows (arXiv 2302.03662), stateful
+  sampling.threshold_probabilities — adaptive threshold (arXiv 2007.15197), stateful
+  sampling.resolve_sampler         — name -> rule, ValueError on unknown names
+  ocs.sample_and_aggregate         — one round of sampling + unbiased aggregation
+  improvement.improvement_factors  — alpha^k, gamma^k (Defs. 11/12)
+  bits.BitsLedger                  — client->master uplink accounting
 """
 
 from repro.core import bits, improvement, ocs, sampling  # noqa: F401
 from repro.core.ocs import OCSResult, sample_and_aggregate  # noqa: F401
 from repro.core.sampling import (  # noqa: F401
     SAMPLERS,
+    STATEFUL_SAMPLERS,
+    SamplerState,
     aocs_probabilities,
+    clustered_probabilities,
+    cyclic_probabilities,
+    init_sampler_state,
     optimal_probabilities,
+    resolve_sampler,
+    threshold_probabilities,
 )

@@ -9,9 +9,19 @@ per client).  Master->client broadcast is excluded, exactly as in the paper
   uniform sampling   : |S| * d * bits_per_param            (|S| ~ Binomial)
   OCS (Alg. 1)       : |S| * d * bits + n * f              (norm upload)
   AOCS (Alg. 2)      : |S| * d * bits + n * f * (1 + 2*j_used)
+  clustered          : |S| * d * bits + n * f              (norm upload)
+  cyclic             : |S| * d * bits                      (deterministic schedule)
+  threshold          : |S| * d * bits                      (local self-selection)
 
-with f = 32 (one float) by default.  ``realized`` uses the drawn mask;
-``expected`` uses sum(p).
+with f = 32 (one float) by default.  The zoo samplers' overheads follow
+their protocols: ``clustered`` needs every client's norm at the master
+(like Alg. 1) to form norm-proportional within-cluster probabilities;
+``cyclic``'s window schedule is derivable from the round counter alone, so
+no client uploads anything beyond its update; ``threshold`` clients compare
+their own norm against the already-broadcast threshold and self-select —
+zero uplink overhead (the threshold rides the model broadcast the paper's
+metric excludes).  ``realized`` uses the drawn mask; ``expected`` uses
+sum(p).
 """
 
 from __future__ import annotations
@@ -58,6 +68,12 @@ class BitsLedger:
             overhead = n * FLOAT_BITS
         elif sampler == "aocs":
             overhead = n * FLOAT_BITS * (1 + 2 * j_used)
+        elif sampler == "clustered":
+            overhead = n * FLOAT_BITS   # norm upload, like Alg. 1
+        elif sampler == "cyclic":
+            overhead = 0                # deterministic window schedule
+        elif sampler == "threshold":
+            overhead = 0                # clients self-select locally
         else:
             raise ValueError(f"unknown sampler {sampler!r}")
         return sent + overhead

@@ -61,6 +61,7 @@ class SamplingPlan(NamedTuple):
     alpha: jax.Array
     gamma: jax.Array
     expected_clients: jax.Array  # sum(p) <= m
+    sampler_state: Any = None    # advanced SamplerState (stateful samplers only)
 
 
 class AvailabilityTrace(NamedTuple):
@@ -112,17 +113,28 @@ def sampling_plan(
     sampler: str | Callable = "aocs",
     j_max: int = 4,
     availability: float | AvailabilityTrace = 1.0,
+    sampler_state: Any = None,
 ) -> SamplingPlan:
     """Norms -> probabilities -> Bernoulli mask -> estimator coefficients.
 
     The master's entire per-round decision, from the ``(n,)`` norm vector
     alone: inclusion probabilities ``p_i`` (Eq. 7 exact via
-    ``sampler='optimal'``, Alg. 2 approximate via ``'aocs'``), the
+    ``sampler='optimal'``, Alg. 2 approximate via ``'aocs'``, or any other
+    :data:`~repro.core.sampling.SAMPLERS` entry — the sampler zoo), the
     independent Bernoulli participation draw (Alg. 1 line 5), partial
     availability (Appendix E, when ``availability < 1``), the improvement
     factors alpha/gamma (Defs. 11/12), and the per-client estimator
     coefficient ``scale_i = mask_i * w_i / (p_i * q)`` that turns Eq. 2 into
     the single contraction ``sum_i scale_i U_i`` for any backend.
+
+    ``sampler`` is validated through
+    :func:`repro.core.sampling.resolve_sampler` — an unknown name raises
+    ``ValueError`` before any PRNG use.  Stateful samplers (``cyclic``,
+    ``threshold``) consume ``sampler_state`` (default-initialised via
+    ``init_sampler_state()`` when None) and return the advanced
+    :class:`~repro.core.sampling.SamplerState` in the plan's
+    ``sampler_state`` field, which callers carry to the next round exactly
+    like ``ClientState``; stateless samplers leave the field None.
 
     ``availability`` may instead be a per-round :class:`AvailabilityTrace`
     (the system-realism generalization of Appendix E): down clients get
@@ -140,7 +152,7 @@ def sampling_plan(
     bitwise identical masks — the property the engine-parity tests gate on
     (see docs/paper_map.md for the full contract).
     """
-    fn = sampling.SAMPLERS[sampler] if isinstance(sampler, str) else sampler
+    fn = sampling.resolve_sampler(sampler)
     u = jnp.asarray(norms)
     n = u.shape[0]
     trace = availability if isinstance(availability, AvailabilityTrace) else None
@@ -161,8 +173,13 @@ def sampling_plan(
         q = 1.0
     if fn is sampling.aocs_probabilities:
         p = fn(u, m, j_max)
+    elif sampling.is_stateful(fn):
+        if sampler_state is None:
+            sampler_state = sampling.init_sampler_state()
+        p, sampler_state = fn(u, m, sampler_state)
     else:
         p = fn(u, m)
+        sampler_state = None
     bern = jax.random.bernoulli(key, jnp.clip(p, 0.0, 1.0), shape=(n,))
     if trace is not None:
         selected = bern & trace.up
@@ -185,6 +202,7 @@ def sampling_plan(
         alpha=alpha,
         gamma=gamma,
         expected_clients=jnp.sum(p),
+        sampler_state=sampler_state,
     )
 
 
@@ -242,7 +260,10 @@ def sample_and_aggregate(
       weights: ``(n,)`` client weights ``w_i`` (sum to 1).
       m: expected number of communicating clients.
       key: PRNG key for the independent Bernoulli participation draws.
-      sampler: 'optimal' | 'aocs' | 'uniform' | 'full' or a callable.
+      sampler: a ``sampling.SAMPLERS`` name ('optimal' | 'aocs' | 'uniform'
+        | 'full' | 'clustered' | 'cyclic' | 'threshold') or a callable;
+        stateful samplers start from a fresh state here (single-shot entry
+        point — carry states through ``sampling_plan`` for multi-round use).
       norms: optionally precomputed ``||w_i U_i||`` (e.g. from the Pallas
         fused-norm kernel, or a round engine's first pass); computed here
         otherwise.

@@ -1,27 +1,72 @@
-"""Optimal client sampling probabilities (paper Sec. 2, Eq. 7) and the
-aggregation-only approximation AOCS (Algorithm 2).
+"""The sampler zoo: client inclusion-probability rules under one contract.
 
-Both functions are pure, jit-able maps from the vector of weighted update norms
-``u_i = ||w_i U_i||`` (shape ``(n,)``) to inclusion probabilities ``p`` with
-``sum(p) <= m`` (up to float error).  They are the mathematical heart of the
-paper; everything else in the framework plugs into them.
+The paper's own rules — exact optimal probabilities (Sec. 2, Eq. 7) and the
+aggregation-only approximation AOCS (Algorithm 2) — plus the related-work
+baselines its Sec. 4 comparison implies: ``clustered`` (representative
+low-variance cohorts, arXiv 2105.05883), ``cyclic`` (deterministic
+participation windows, arXiv 2302.03662) and ``threshold`` (norm-threshold
+self-selection, Ribero–Vikalo arXiv 2007.15197).
+
+Every entry in :data:`SAMPLERS` is a pure, jit-able map from the vector of
+weighted update norms ``u_i = ||w_i U_i||`` (shape ``(n,)``) to inclusion
+probabilities ``p``; :func:`repro.core.ocs.sampling_plan` turns any of them
+into Bernoulli masks + unbiased estimator coefficients, so each sampler
+inherits the whole engine matrix (vmap/scan/shard x compression x
+availability) unchanged.  The shared invariants every entry must satisfy are
+gated by tests/test_sampler_contract.py (budget, Eq. 4 scale identity,
+Monte-Carlo unbiasedness, permutation invariance, stateful determinism).
 
 Conventions
 -----------
 * ``m`` is the *expected* number of communicating clients (a python int or a
-  traced scalar).
-* Clients with ``u_i == 0`` receive ``p_i = 0``: a zero-norm update carries no
-  information and contributes ``w_i/p_i * U_i = 0`` regardless, so excluding it
-  keeps the estimator unbiased (the paper's Remark after Eq. 7 — "at most m
-  non-zero updates" is the alpha=0 case).
+  traced scalar for the paper's samplers; ``clustered``/``cyclic``/
+  ``threshold`` need a static python int).
+* Norm-driven samplers give clients with ``u_i == 0`` probability 0: a
+  zero-norm update carries no information and contributes
+  ``w_i/p_i * U_i = 0`` regardless, so excluding it keeps the estimator
+  unbiased (the paper's Remark after Eq. 7 — "at most m non-zero updates" is
+  the alpha=0 case).  Norm-oblivious samplers (``uniform``, ``full``,
+  ``cyclic``) keep their schedule regardless of norms.
+* Stateful samplers (:data:`STATEFUL_SAMPLERS`) take and return a
+  :class:`SamplerState`; the sim driver carries it round to round exactly
+  like the client-state layer's ``ClientState``.
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 _EPS = 1e-12
+
+# EMA rate of the adaptive threshold sampler's running norm-quantile estimate
+# (Ribero–Vikalo's bandit-style update): tau <- (1-beta) tau + beta target.
+THRESHOLD_BETA = 0.2
+
+
+class SamplerState(NamedTuple):
+    """Cross-round state of the stateful samplers, carried like ClientState.
+
+    One tiny pytree (two scalars) that rides through the sim driver's three
+    modes — a jitted carry in host/prefetch, a ``lax.scan`` carry slot next
+    to ``(params, opt_state)`` in scan mode — and replicated (``P()``)
+    through the shard_map round.  ``step`` is the round counter the cyclic
+    window position derives from; ``threshold`` is the adaptive sampler's
+    running norm-threshold estimate (unused by ``cyclic``, and vice versa).
+    """
+
+    step: jax.Array       # () int32 — rounds the sampler has seen
+    threshold: jax.Array  # () f32   — running norm-threshold estimate (tau)
+
+
+def init_sampler_state() -> SamplerState:
+    """Fresh :class:`SamplerState`: round 0, threshold 0 (cold-start:
+    ``threshold`` lets everyone send on its first round, then adapts)."""
+    return SamplerState(
+        step=jnp.zeros((), jnp.int32), threshold=jnp.zeros((), jnp.float32)
+    )
 
 
 def optimal_probabilities(u: jax.Array, m: int) -> jax.Array:
@@ -104,9 +149,126 @@ def full_probabilities(u: jax.Array, m: int) -> jax.Array:
     return jnp.ones((u.shape[0],), dtype=jnp.result_type(u, jnp.float32))
 
 
+def clustered_probabilities(u: jax.Array, m: int) -> jax.Array:
+    """Clustered sampling (arXiv 2105.05883): one representative per cluster.
+
+    Clients are partitioned into ``m`` clusters and each cluster nominates
+    exactly one expected representative, norm-proportionally within the
+    cluster: ``p_i = u_i / sum_{j in cluster(i)} u_j``.  The cluster
+    assignment is the strided rank partition — sort norms descending and put
+    rank ``r`` into cluster ``r mod m`` — so every cluster is a cross-section
+    of the norm strata (each holds one of the top-m norms, one of the next
+    m, ...).  That stratification is the low-variance property the source
+    paper claims, and it guarantees the budget: with at least ``m`` non-zero
+    norms every cluster has mass, so ``sum(p) == m`` exactly.  ``p_i > 0``
+    whenever ``u_i > 0``, so the Eq. 2 estimator stays unbiased.  ``m`` must
+    be a static python int (it is the segment count).
+    """
+    u = jnp.asarray(u)
+    n = u.shape[0]
+    order = jnp.argsort(-u)  # descending norms
+    ranks = jnp.zeros(n, dtype=jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    cluster = ranks % m
+    sums = jax.ops.segment_sum(u, cluster, num_segments=m)
+    denom = jnp.take(sums, cluster)
+    p = jnp.where(u > _EPS, u / jnp.maximum(denom, _EPS), 0.0)
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def cyclic_probabilities(
+    u: jax.Array, m: int, state: SamplerState
+) -> tuple[jax.Array, SamplerState]:
+    """Cyclic client participation (arXiv 2302.03662): deterministic windows.
+
+    Round ``k`` selects the contiguous window of ``m`` clients starting at
+    offset ``(k mod ceil(n/m)) * m`` (wrapping modulo ``n`` when ``m`` does
+    not divide ``n``), so every client participates in a deterministic
+    window at least once per cycle of ``ceil(n/m)`` rounds —
+    norm-oblivious, like ``uniform``, but with regularized (zero-variance)
+    per-round cohorts.  Probabilities are exactly 0/1, so the Bernoulli draw
+    in ``sampling_plan`` is deterministic and ``sum(p) == m`` every round.
+    The window position lives in the :class:`SamplerState` ``step`` counter
+    carried round to round like ``ClientState``; ``m`` must be a static
+    python int.
+    """
+    u = jnp.asarray(u)
+    n = u.shape[0]
+    n_windows = -(-n // m)  # ceil(n / m), python int
+    pos = state.step % n_windows
+    offsets = (jnp.arange(n, dtype=jnp.int32) - pos * m) % n
+    p = (offsets < m).astype(jnp.result_type(u, jnp.float32))
+    return p, state._replace(step=state.step + 1)
+
+
+def threshold_probabilities(
+    u: jax.Array, m: int, state: SamplerState
+) -> tuple[jax.Array, SamplerState]:
+    """Adaptive norm-threshold selection (Ribero–Vikalo, arXiv 2007.15197).
+
+    Only clients whose update norm reaches the running threshold ``tau``
+    communicate: ``p_i = 1 if u_i >= tau else 0`` (zero-norm clients never
+    send).  ``tau`` is a bandit-style running estimate of the m-th largest
+    norm, updated after every round by an exponential moving average
+    (``tau <- (1-beta) tau + beta * mth_largest(u)``, beta =
+    :data:`THRESHOLD_BETA`) kept in the :class:`SamplerState`.  From the
+    cold start ``tau = 0`` every client sends round 1, then the sender count
+    anneals toward the budget ``m`` — the *adaptive* budget semantics the
+    contract suite documents as this sampler's exception (``sum(p)`` is n at
+    round 1 and converges to m, rather than equalling m every round).
+    Senders have ``p_i = 1``, so the aggregate over the sender set is
+    trivially unbiased (scale ``w_i``) and the Bernoulli draw is
+    deterministic.  ``m`` must be a static python int.
+    """
+    u = jnp.asarray(u)
+    n = u.shape[0]
+    p = ((u > _EPS) & (u >= state.threshold)).astype(
+        jnp.result_type(u, jnp.float32)
+    )
+    target = jnp.sort(u)[n - m]  # m-th largest norm this round
+    new_tau = (1.0 - THRESHOLD_BETA) * state.threshold + THRESHOLD_BETA * target
+    return p, SamplerState(step=state.step + 1, threshold=new_tau)
+
+
 SAMPLERS = {
     "optimal": optimal_probabilities,
     "aocs": aocs_probabilities,
     "uniform": uniform_probabilities,
     "full": full_probabilities,
+    "clustered": clustered_probabilities,
+    "cyclic": cyclic_probabilities,
+    "threshold": threshold_probabilities,
 }
+
+# samplers whose probability rule takes/returns a SamplerState
+STATEFUL_SAMPLERS = ("cyclic", "threshold")
+_STATEFUL_FNS = (cyclic_probabilities, threshold_probabilities)
+
+
+def resolve_sampler(sampler):
+    """Resolve a sampler name (or callable) to its probability function.
+
+    THE validation point of the sampler axis, shared by ``sampling_plan``,
+    ``RoundEngine.__init__`` and ``validate_shard_config`` so a bad name is
+    rejected at config/factory time — before any PRNG key is consumed.
+    Callables pass through untouched (custom probability rules); an unknown
+    string raises ``ValueError`` listing ``SAMPLERS`` (an earlier version
+    raised a bare ``KeyError`` from the dict lookup, and only at trace time).
+    """
+    if callable(sampler):
+        return sampler
+    fn = SAMPLERS.get(sampler)
+    if fn is None:
+        raise ValueError(
+            f"unknown sampler {sampler!r}; want one of "
+            f"{sorted(SAMPLERS)} or a callable"
+        )
+    return fn
+
+
+def is_stateful(sampler) -> bool:
+    """True iff ``sampler`` (name or callable) carries a SamplerState."""
+    if callable(sampler):
+        return sampler in _STATEFUL_FNS
+    return sampler in STATEFUL_SAMPLERS

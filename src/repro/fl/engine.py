@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core import ocs
+from repro.core import ocs, sampling
 from repro.kernels import update_cache
 
 MEMORY_POLICIES = ("vmap", "scan")
@@ -73,7 +73,10 @@ class RoundMetrics(NamedTuple):
     :class:`~repro.core.ocs.AvailabilityTrace`: ``selected_clients`` is the
     Bernoulli draw before deadline/dropout attrition, ``deadline_misses``
     the selected clients whose latency beat them, ``dropouts`` the selected
-    on-time clients lost to mid-round faults.
+    on-time clients lost to mid-round faults.  ``sampler_state`` is the
+    advanced :class:`~repro.core.sampling.SamplerState` of a stateful
+    sampler (None otherwise) — callers feed it back into the next round's
+    ``round_step`` exactly like ``ClientState``.
     """
 
     loss: jax.Array
@@ -87,6 +90,7 @@ class RoundMetrics(NamedTuple):
     selected_clients: jax.Array
     deadline_misses: jax.Array
     dropouts: jax.Array
+    sampler_state: Any = None
 
 
 def client_compression_material(updates: Any, keys: jax.Array, fl: FLConfig):
@@ -179,10 +183,12 @@ def make_engine(loss_fn: Callable, fl: FLConfig, server_opt=None, *,
                 interpret: bool | None = None) -> Callable:
     """Mesh-aware round-step factory: THE entry point callers should use.
 
-    Returns ``round_step(params, opt_state, batch, weights, key, trace=None)``
-    (the optional trailing ``trace`` is a per-round
+    Returns ``round_step(params, opt_state, batch, weights, key, trace=None,
+    sampler_state=None)`` (the optional trailing ``trace`` is a per-round
     :class:`~repro.core.ocs.AvailabilityTrace` from the sim client-state
-    layer; omitted, every path behaves exactly as before):
+    layer; ``sampler_state`` the carried
+    :class:`~repro.core.sampling.SamplerState` of a stateful sampler —
+    omitted, every path behaves exactly as before):
 
     * ``mesh=None`` — the single-device/GSPMD :class:`RoundEngine`, configured
       by ``fl.round_engine`` x ``fl.agg_backend`` (x ``fl.scan_group``).
@@ -268,6 +274,10 @@ class RoundEngine:
             raise ValueError(
                 f"unknown compressor {fl.compression!r}; want one of {COMPRESSORS}"
             )
+        # ValueError on unknown sampler names at factory time, before any
+        # PRNG use (same convention as validate_shard_config).
+        sampling.resolve_sampler(fl.sampler)
+        self._stateful = sampling.is_stateful(fl.sampler)
         self._local_update = make_local_update(loss_fn, fl)
 
     @property
@@ -322,14 +332,17 @@ class RoundEngine:
             selected_clients=jnp.sum(plan.selected).astype(jnp.int32),
             deadline_misses=misses,
             dropouts=drops,
+            sampler_state=plan.sampler_state,
         )
 
-    def _plan(self, u, weights, k_sample, trace=None) -> ocs.SamplingPlan:
+    def _plan(self, u, weights, k_sample, trace=None,
+              sampler_state=None) -> ocs.SamplingPlan:
         fl = self.fl
         return ocs.sampling_plan(
             u, weights, fl.cohort_target(), k_sample,
             sampler=fl.sampler, j_max=fl.j_max,
             availability=fl.availability if trace is None else trace,
+            sampler_state=sampler_state,
         )
 
     # -- memory policies ----------------------------------------------------
@@ -342,14 +355,15 @@ class RoundEngine:
 
         fl = self.fl
 
-        def round_step(params, opt_state, batch, weights, key, trace=None):
+        def round_step(params, opt_state, batch, weights, key, trace=None,
+                       sampler_state=None):
             k_sample, k_comp = jax.random.split(key)
             updates, losses = jax.vmap(self._local_update, in_axes=(None, 0))(
                 params, batch
             )
             if fl.compression == "none":
                 u = ocs.client_norms(updates, weights)
-                plan = self._plan(u, weights, k_sample, trace)
+                plan = self._plan(u, weights, k_sample, trace, sampler_state)
                 aggregate = ocs.aggregate_updates(
                     updates, plan.scale, backend=self.backend,
                     interpret=self.interpret,
@@ -368,7 +382,7 @@ class RoundEngine:
                 mats = client_compression_material(updates, comp_keys, fl)
                 compressed = client_apply_compression(updates, mats, fl)
                 u = ocs.client_norms(compressed, weights)
-                plan = self._plan(u, weights, k_sample, trace)
+                plan = self._plan(u, weights, k_sample, trace, sampler_state)
                 if self.backend == "pallas":
                     flat = kops.tree_to_client_matrix(updates)
                     mat_flats = tuple(
@@ -411,7 +425,8 @@ class RoundEngine:
         def take(tree, lo, hi):
             return jax.tree_util.tree_map(lambda x: x[lo:hi], tree)
 
-        def round_step(params, opt_state, batch, weights, key, trace=None):
+        def round_step(params, opt_state, batch, weights, key, trace=None,
+                       sampler_state=None):
             k_sample, k_comp = jax.random.split(key)
             gbatch = group_batches(batch)
             w_groups = weights.reshape(n_groups, g)
@@ -464,7 +479,7 @@ class RoundEngine:
                 loss_parts.append(losses_s)
             u = jnp.concatenate(norm_parts, axis=0).reshape(n)
             losses = jnp.concatenate(loss_parts, axis=0).reshape(n)
-            plan = self._plan(u, weights, k_sample, trace)
+            plan = self._plan(u, weights, k_sample, trace, sampler_state)
             scale_g = plan.scale.reshape(n_groups, g)
 
             # post-plan aggregate into one flat f32 (D,) accumulator, group by

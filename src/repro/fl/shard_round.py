@@ -53,7 +53,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FLConfig
-from repro.core import ocs
+from repro.core import ocs, sampling
 from repro.fl.round import RoundMetrics, make_local_update
 from repro.fl.engine import (
     client_apply_compression,
@@ -73,6 +73,7 @@ def validate_shard_config(fl: FLConfig, axis_size: int) -> None:
     """
     from repro.core.compression import COMPRESSORS
 
+    sampling.resolve_sampler(fl.sampler)  # ValueError listing SAMPLERS on unknown names
     if fl.agg_backend not in ocs.AGG_BACKENDS:
         raise ValueError(
             f"unknown aggregation backend {fl.agg_backend!r}; "
@@ -91,8 +92,12 @@ def validate_shard_config(fl: FLConfig, axis_size: int) -> None:
 
 def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = None,
                          interpret: bool | None = None):
-    """Returns round_step(params, opt_state, batch, weights, key, trace=None)
-    with the client dimension sharded over ``client_axis`` of ``mesh``.
+    """Returns round_step(params, opt_state, batch, weights, key, trace=None,
+    sampler_state=None) with the client dimension sharded over
+    ``client_axis`` of ``mesh``.  Stateful samplers (cyclic/threshold) carry
+    their replicated :class:`~repro.core.sampling.SamplerState` through the
+    trailing argument and return the advanced state in
+    ``metrics.sampler_state``, exactly like the single-device engines.
 
     ``client_axis`` defaults to ``fl.client_axis``; ``fl.agg_backend``
     selects the aggregation path (see module docstring), and ``interpret``
@@ -113,8 +118,9 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
     axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
     validate_shard_config(fl, axis_size)
     local_update = make_local_update(loss_fn, fl)
+    stateful = sampling.is_stateful(fl.sampler)
 
-    def body(params, batch, weights, key, trace=None):
+    def body(params, batch, weights, key, trace=None, sampler_state=None):
         # params/key replicated; batch/weights sharded on the client axis.
         # trace (when given) is the round's AvailabilityTrace, replicated —
         # every shard applies the same realized system state.
@@ -155,6 +161,7 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
             u_all, w_all, fl.cohort_target(), k_sample,
             sampler=fl.sampler, j_max=fl.j_max,
             availability=fl.availability if trace is None else trace,
+            sampler_state=sampler_state,
         )
         scale = sl(plan.scale)
 
@@ -185,37 +192,77 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
             lambda pp, gg: (pp - fl.lr_global * gg).astype(pp.dtype), params, aggregate
         )
         loss = jax.lax.pmean(jnp.mean(losses), client_axis)
-        return new_params, (loss, plan.norms, plan.probs, plan.mask, plan.selected)
+        extras = (loss, plan.norms, plan.probs, plan.mask, plan.selected)
+        if stateful:
+            # stateful-sampler variants also emit the advanced SamplerState
+            # (replicated: every shard ran the identical plan).
+            extras = extras + (plan.sampler_state,)
+        return new_params, extras
 
     _shard_map, _check = kops.get_shard_map()
-    outs = (P(), (P(), P(), P(), P(), P()))
-    shard_fn = _shard_map(
-        lambda params, batch, weights, key: body(params, batch, weights, key),
-        mesh=mesh,
-        in_specs=(P(), P(client_axis), P(client_axis), P()),
-        out_specs=outs,
-        **_check,
-    )
-    # trace variant: same body, the AvailabilityTrace rides in replicated
-    # (P() over every leaf) so each shard sees the full (n,) system state.
-    shard_fn_trace = _shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(), P(client_axis), P(client_axis), P(), P()),
-        out_specs=outs,
-        **_check,
-    )
+    n_extras = 6 if stateful else 5
+    outs = (P(), (P(),) * n_extras)
+    if stateful:
+        # the replicated SamplerState is an extra P() input after the key
+        # (and after the trace on the trace variant).
+        shard_fn = _shard_map(
+            lambda params, batch, weights, key, samp: body(
+                params, batch, weights, key, None, samp
+            ),
+            mesh=mesh,
+            in_specs=(P(), P(client_axis), P(client_axis), P(), P()),
+            out_specs=outs,
+            **_check,
+        )
+        shard_fn_trace = _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(client_axis), P(client_axis), P(), P(), P()),
+            out_specs=outs,
+            **_check,
+        )
+    else:
+        shard_fn = _shard_map(
+            lambda params, batch, weights, key: body(params, batch, weights, key),
+            mesh=mesh,
+            in_specs=(P(), P(client_axis), P(client_axis), P()),
+            out_specs=outs,
+            **_check,
+        )
+        # trace variant: same body, the AvailabilityTrace rides in replicated
+        # (P() over every leaf) so each shard sees the full (n,) system state.
+        shard_fn_trace = _shard_map(
+            lambda params, batch, weights, key, trace: body(
+                params, batch, weights, key, trace
+            ),
+            mesh=mesh,
+            in_specs=(P(), P(client_axis), P(client_axis), P(), P()),
+            out_specs=outs,
+            **_check,
+        )
 
-    def round_step(params, opt_state, batch, weights, key, trace=None):
+    def round_step(params, opt_state, batch, weights, key, trace=None,
+                   sampler_state=None):
+        if stateful and sampler_state is None:
+            sampler_state = sampling.init_sampler_state()
+        samp_out = None
         if trace is None:
-            new_params, (loss, u, p, mask, selected) = shard_fn(
-                params, batch, weights, key
-            )
+            args = (params, batch, weights, key)
+            if stateful:
+                new_params, (loss, u, p, mask, selected, samp_out) = shard_fn(
+                    *args, sampler_state
+                )
+            else:
+                new_params, (loss, u, p, mask, selected) = shard_fn(*args)
             misses = drops = jnp.zeros((), jnp.int32)
         else:
-            new_params, (loss, u, p, mask, selected) = shard_fn_trace(
-                params, batch, weights, key, trace
-            )
+            args = (params, batch, weights, key, trace)
+            if stateful:
+                new_params, (loss, u, p, mask, selected, samp_out) = shard_fn_trace(
+                    *args, sampler_state
+                )
+            else:
+                new_params, (loss, u, p, mask, selected) = shard_fn_trace(*args)
             misses = jnp.sum(selected & ~trace.on_time).astype(jnp.int32)
             drops = jnp.sum(selected & trace.on_time & ~trace.kept).astype(jnp.int32)
         from repro.core.improvement import improvement_factors
@@ -227,6 +274,7 @@ def make_shard_map_round(loss_fn, fl: FLConfig, mesh, client_axis: str | None = 
             probs=p, norms=u, mask=mask,
             selected_clients=jnp.sum(selected).astype(jnp.int32),
             deadline_misses=misses, dropouts=drops,
+            sampler_state=samp_out,
         )
         return new_params, opt_state, metrics
 

@@ -17,6 +17,13 @@ selects the double-buffered device-pool pipeline vs the legacy host loop,
 scan-over-rounds and a mesh are mutually exclusive).  The ledger artifact
 lands under benchmarks/artifacts/sim/.
 
+``--sampler NAME`` picks the client-selection rule from the sampler zoo
+(``core/sampling.py::SAMPLERS`` — optimal / aocs / uniform / full /
+clustered / cyclic / threshold) on either branch: it sets the arch
+workload's ``FLConfig.sampler``, or overrides a scenario cell's own rule.
+Stateful samplers (cyclic/threshold) have their ``SamplerState`` carried
+round to round on both paths.
+
 ``--stragglers SPEC`` / ``--deadline T`` switch on the client-state layer
 (repro/sim/pool.py): Markov availability chains, heterogeneous latency vs a
 round deadline, dropout fault injection, with ``over=`` over-selection.
@@ -130,6 +137,10 @@ def run_scenario_cli(args):
     else:
         mode = "prefetch" if args.prefetch == "on" else "host"
     sc = get_scenario(args.scenario)
+    if args.sampler:
+        # --sampler overrides the cell's own rule (validated up front by the
+        # engine factories via sampling.resolve_sampler)
+        sc = sc.with_(fl=dataclasses.replace(sc.fl, sampler=args.sampler))
     system, over = parse_stragglers(args.stragglers, args.deadline)
     if system is not None:
         # CLI overrides the cell's own system config (if any); 'over=' rides
@@ -206,8 +217,12 @@ def main():
                          "client-state layer; composes with --stragglers)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--expected", type=int, default=2)
-    ap.add_argument("--sampler", default="aocs",
-                    choices=["optimal", "aocs", "uniform", "full"])
+    ap.add_argument("--sampler", default=None,
+                    choices=["optimal", "aocs", "uniform", "full",
+                             "clustered", "cyclic", "threshold"],
+                    help="client-selection rule (sampler zoo; default: aocs "
+                         "on the arch path, the scenario's own sampler with "
+                         "--scenario)")
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
@@ -238,7 +253,8 @@ def main():
     model = build_model(cfg, remat=False)
     system, over = parse_stragglers(args.stragglers, args.deadline)
     fl = FLConfig(
-        n_clients=args.clients, expected_clients=args.expected, sampler=args.sampler,
+        n_clients=args.clients, expected_clients=args.expected,
+        sampler=args.sampler or "aocs",
         local_steps=args.local_steps, lr_local=args.lr_local,
         round_engine=args.engine, agg_backend=args.agg_backend,
         scan_group=args.scan_group, cache_groups=args.cache_groups,
@@ -287,6 +303,11 @@ def main():
     w = client_weights(fl)
     rng = np.random.default_rng(0)
     total_bits = 0
+    # stateful samplers (cyclic/threshold): carry their SamplerState round
+    # to round, exactly like the sim driver does.
+    from repro.core.sampling import init_sampler_state, is_stateful
+
+    samp = init_sampler_state() if is_stateful(fl.sampler) else None
     for k in range(args.rounds):
         batch = synthetic_token_batch(rng, cfg, fl.n_clients, fl.local_steps,
                                       args.batch, args.seq)
@@ -295,11 +316,14 @@ def main():
         sys_col = ""
         if state is not None:
             state, trace = state_step(state, kk, jnp.arange(fl.n_clients))
-            params, _, m = step(params, (), batch, w, kk, trace)
+        else:
+            trace = None
+        params, _, m = step(params, (), batch, w, kk, trace, samp)
+        if samp is not None:
+            samp = m.sampler_state
+        if state is not None:
             sys_col = (f"sel {int(m.selected_clients)} "
                        f"miss {int(m.deadline_misses)} drop {int(m.dropouts)} ")
-        else:
-            params, _, m = step(params, (), batch, w, kk)
         loss = float(m.loss)
         total_bits += round_bits(fl, dim, m.mask)
         print(f"[round {k:3d}] loss {loss:.4f} alpha {float(m.alpha):.3f} "

@@ -68,6 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sampling import init_sampler_state, is_stateful
 from repro.fl.engine import RoundEngine, make_engine
 from repro.fl.round import client_weights, round_bits_duplex
 from repro.sim.pool import (
@@ -312,6 +313,11 @@ def run_simulation(
         state_step = jax.jit(
             lambda st, kk, c: step_client_state(st, kk, c, system)
         )
+    # stateful samplers (cyclic/threshold): their SamplerState rides through
+    # the round loop exactly like the client-state chain — fed into every
+    # round_step, read back from metrics.sampler_state (host/prefetch) or
+    # carried in the lax.scan carry (scan mode).
+    samp = init_sampler_state() if is_stateful(fl.sampler) else None
     sizes = np.asarray(dataset.sizes())
     uniform_w = client_weights(fl)
 
@@ -345,13 +351,13 @@ def run_simulation(
             kk = jax.random.fold_in(key, 1000 + k)
             if state is not None:
                 state, trace = state_step(state, kk, jnp.asarray(clients))
-                params, opt_state, metrics = round_step(
-                    params, opt_state, batch, w, kk, trace
-                )
             else:
-                params, opt_state, metrics = round_step(
-                    params, opt_state, batch, w, kk
-                )
+                trace = None
+            params, opt_state, metrics = round_step(
+                params, opt_state, batch, w, kk, trace, samp
+            )
+            if samp is not None:
+                samp = metrics.sampler_state
             dev_metrics.append(metrics)
             if want_eval(k):
                 dev_evals.append((k, eval_fn(params, eval_batch)))
@@ -388,14 +394,11 @@ def run_simulation(
                 # dispatched while round k's step is still executing.
                 cur = draw_round(k + 1)
                 cur_batch = cpool.gather(cur[0])
-            if trace is None:
-                params, opt_state, metrics = round_step(
-                    params, opt_state, batch, w, kk
-                )
-            else:
-                params, opt_state, metrics = round_step(
-                    params, opt_state, batch, w, kk, trace
-                )
+            params, opt_state, metrics = round_step(
+                params, opt_state, batch, w, kk, trace, samp
+            )
+            if samp is not None:
+                samp = metrics.sampler_state
             dev_metrics.append(metrics)
             if want_eval(k):
                 dev_evals.append((k, eval_fn(params, eval_batch)))
@@ -410,31 +413,37 @@ def run_simulation(
         use_state = state is not None
         if not use_state:
             state = ()  # empty carry slot; scanned next to (params, opt_state)
+        use_samp = samp is not None
+        if not use_samp:
+            samp = ()  # empty SamplerState carry slot for stateless samplers
 
-        def chunk_fn(buffers, params, opt_state, st, clients_s, take_s,
+        def chunk_fn(buffers, params, opt_state, st, sp, clients_s, take_s,
                      smask_s, w_s, keys_s):
             def body(carry, xs):
-                p, o, s = carry
+                p, o, s, sp = carry
                 c, t, sm, w, kk = xs
+                trace = None
                 if use_state:
                     # the client-state chain lives in the scan carry: same
                     # step_client_state, same per-round key fold as the
                     # host/prefetch jitted state step — bitwise identical.
                     s, trace = step_client_state(s, kk, c, system)
-                    p, o, m = step_fn(
-                        p, o, gather_batch(buffers, c, t, sm), w, kk, trace
-                    )
-                else:
-                    p, o, m = step_fn(p, o, gather_batch(buffers, c, t, sm), w, kk)
-                return (p, o, s), m
+                p, o, m = step_fn(
+                    p, o, gather_batch(buffers, c, t, sm), w, kk, trace,
+                    sp if use_samp else None,
+                )
+                if use_samp:
+                    # the SamplerState advances in the carry, like the chain
+                    sp = m.sampler_state
+                return (p, o, s, sp), m
 
-            (params, opt_state, st), ms = jax.lax.scan(
-                body, (params, opt_state, st),
+            (params, opt_state, st, sp), ms = jax.lax.scan(
+                body, (params, opt_state, st, sp),
                 (clients_s, take_s, smask_s, w_s, keys_s),
             )
-            return params, opt_state, st, ms
+            return params, opt_state, st, sp, ms
 
-        chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3))
+        chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4))
         done = 0
         while done < rounds:
             span = min(rounds_per_scan, rounds - done)
@@ -456,8 +465,8 @@ def run_simulation(
                 w_s.append(cohort_weights(clients))
                 keys_s.append(jax.random.fold_in(key, 1000 + k))
             clients_s, take_s, smask_s = stack_plans(plans)
-            params, opt_state, state, ms = chunk(
-                cpool.buffers, params, opt_state, state,
+            params, opt_state, state, samp, ms = chunk(
+                cpool.buffers, params, opt_state, state, samp,
                 jnp.asarray(clients_s), jnp.asarray(take_s), jnp.asarray(smask_s),
                 jnp.stack(w_s), jnp.stack(keys_s),
             )

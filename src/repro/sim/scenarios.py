@@ -2,9 +2,10 @@
 
 The paper evaluates its samplers through a grid of multi-round simulations —
 algorithm (FedAvg Sec. 4.2 / DSGD Sec. 4.1) × sampler (optimal / aocs /
-uniform / full) × dataset (FEMNIST datasets 1-3, Shakespeare, balanced
-CIFAR) × partial availability (Appendix E) × compression (Sec. 6 future
-work) × round-engine combo.  Each cell of that experiment grid is one named,
+uniform / full, plus the zoo baselines clustered / cyclic / threshold) ×
+dataset (FEMNIST datasets 1-3, Shakespeare, balanced CIFAR) × partial
+availability (Appendix E) × compression (Sec. 6 future work) ×
+round-engine combo.  Each cell of that experiment grid is one named,
 parameterized :class:`Scenario` here; ``SCENARIOS`` is the registry the sim
 driver, ``launch/train.py --scenario`` and the scenario-grid smoke test all
 read (every registered scenario must run end-to-end on the reduced synthetic
@@ -330,6 +331,83 @@ def _build_grid():
         fl=_fl(agg_backend="pallas", over_select=2.0),
         system=straggler, sharded=True,
         paper="straggler cell on the shard_map round (trace replicated)",
+    ))
+    # --- sampler-zoo column (ISSUE 8): alternative client-selection rules
+    # from the literature, each a pluggable SAMPLERS entry running through
+    # the same sampling_plan contract (availability, over-selection and all
+    # engines unchanged).  clustered = arXiv 2105.05883, cyclic = arXiv
+    # 2302.03662 (stateful window schedule), threshold = arXiv 2007.15197
+    # (stateful adaptive norm threshold).
+    for did in (1, 2):
+        register(Scenario(
+            name=f"femnist{did}-fedavg-clustered",
+            dataset=f"femnist{did}",
+            fl=_fl(sampler="clustered"),
+            paper=f"arXiv 2105.05883 (clustered sampling, FEMNIST dataset {did})",
+        ))
+        register(Scenario(
+            name=f"femnist{did}-fedavg-threshold",
+            dataset=f"femnist{did}",
+            fl=_fl(sampler="threshold"),
+            paper=f"arXiv 2007.15197 (adaptive threshold, FEMNIST dataset {did})",
+        ))
+    register(Scenario(
+        name="femnist1-fedavg-cyclic",
+        dataset="femnist1",
+        fl=_fl(sampler="cyclic"),
+        paper="arXiv 2302.03662 (cyclic participation windows)",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-threshold-randk",
+        dataset="femnist1",
+        fl=_fl(sampler="threshold", compression="randk", compression_param=0.1),
+        paper="arXiv 2007.15197 threshold x rand-k compression",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-clustered-markov",
+        dataset="femnist1", fl=_fl(sampler="clustered"), system=markov,
+        paper="arXiv 2105.05883 clustered under Markov availability",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-cyclic-deadline",
+        dataset="femnist1",
+        fl=_fl(sampler="cyclic", over_select=1.5), system=deadline,
+        paper="arXiv 2302.03662 cyclic windows x deadline + over-selection",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-threshold-straggler",
+        dataset="femnist1",
+        fl=_fl(sampler="threshold", over_select=2.0), system=straggler,
+        paper="arXiv 2007.15197 threshold under the straggler combination",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-clustered-scan",
+        dataset="femnist1",
+        fl=_fl(sampler="clustered", round_engine="scan", scan_group=4,
+               cache_groups=4),
+        paper="arXiv 2105.05883 clustered on the single-pass scan engine",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-threshold-shard",
+        dataset="femnist1",
+        fl=_fl(sampler="threshold", agg_backend="pallas"),
+        sharded=True,
+        paper="arXiv 2007.15197 threshold on the shard_map round "
+              "(SamplerState replicated)",
+    ))
+    register(Scenario(
+        name="femnist1-fedavg-cyclic-shard",
+        dataset="femnist1",
+        fl=_fl(sampler="cyclic"),
+        sharded=True,
+        paper="arXiv 2302.03662 cyclic windows on the shard_map round",
+    ))
+    register(Scenario(
+        name="femnist1-dsgd-clustered",
+        dataset="femnist1",
+        fl=_fl(algorithm="dsgd", sampler="clustered", local_steps=1,
+               lr_local=0.0625, lr_global=0.5),
+        paper="arXiv 2105.05883 clustered with DSGD (R=1 local step)",
     ))
 
 

@@ -55,6 +55,13 @@ PARITY_VARIANTS = {
                     "_system": {"p_up": 0.6, "p_down": 0.4,
                                 "latency_sigma": 0.5, "deadline": 3.0,
                                 "drop_prob": 0.1}},
+    # sampler-zoo variants (ISSUE 8): every new SAMPLERS entry earns the
+    # same bitwise-mask + equal-duplex-bits guarantee across all engines.
+    # The stateful two run their round with a fresh init_sampler_state()
+    # (threaded by run_parity_combo), matching round one of a sim run.
+    "clustered": {"sampler": "clustered"},
+    "cyclic": {"sampler": "cyclic"},
+    "threshold": {"sampler": "threshold"},
 }
 
 # (engine, agg_backend, cache_groups): vmap combos, scan combos at every
@@ -76,10 +83,12 @@ def parity_fl(variant: str, **kw):
     keys (``_system``) are stripped — :func:`parity_trace` consumes them."""
     from repro.configs.base import FLConfig
 
-    merged = {**PARITY_VARIANTS[variant], **kw}
-    merged.pop("_system", None)
-    return FLConfig(n_clients=8, expected_clients=3, sampler="aocs",
-                    local_steps=2, lr_local=0.1, **merged)
+    base = dict(n_clients=8, expected_clients=3, sampler="aocs",
+                local_steps=2, lr_local=0.1)
+    base.update(PARITY_VARIANTS[variant])
+    base.update(kw)
+    base.pop("_system", None)
+    return FLConfig(**base)
 
 
 def parity_trace(variant: str, fl, key):
@@ -128,18 +137,21 @@ def parity_mesh(fl):
 
 
 def run_parity_combo(engine, backend, cache_groups, loss, fl, params, batch,
-                     weights, key, trace=None):
+                     weights, key, trace=None, sampler_state=None):
     """Execute one matrix combo's round step; returns (params', opt, metrics).
 
     ``engine='shard'`` runs the shard_map round via ``make_engine(mesh=...)``
     on :func:`parity_mesh`; the single-device engines run through
     :class:`RoundEngine` with ``scan_group=4``.  A non-None ``trace`` rides
-    the client-state path (``round_step(..., trace)``) on every engine.
+    the client-state path (``round_step(..., trace)``) on every engine;
+    stateful zoo samplers default-init their SamplerState when
+    ``sampler_state`` is None (identical on every combo, so parity holds).
     """
     import dataclasses
 
     import jax
 
+    from repro.core.sampling import init_sampler_state, is_stateful
     from repro.fl.engine import RoundEngine, make_engine
 
     if engine == "shard":
@@ -150,4 +162,6 @@ def run_parity_combo(engine, backend, cache_groups, loss, fl, params, batch,
             RoundEngine(loss, fl, memory=engine, backend=backend,
                         scan_group=4, cache_groups=cache_groups).make_step()
         )
-    return step(params, (), batch, weights, key, trace)
+    if sampler_state is None and is_stateful(fl.sampler):
+        sampler_state = init_sampler_state()
+    return step(params, (), batch, weights, key, trace, sampler_state)

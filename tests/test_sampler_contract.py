@@ -1,0 +1,368 @@
+"""The shared sampler-contract suite: every ``SAMPLERS`` entry, one bar.
+
+The sampler zoo (core/sampling.py) admits any probability rule into the
+engine matrix, so the zoo's admission test lives here, parametrized over
+every registered entry — a new sampler is NOT done until it passes this
+file.  The contract:
+
+* **budget** — ``sum(p)`` equals the sampler's declared budget (``m`` for
+  the paper's samplers and the zoo's clustered/cyclic; ``n`` for full) on
+  any norm vector with at least ``m`` non-zero entries.  ``threshold`` is
+  the documented exception: its budget is *adaptive* — ``sum(p) == n`` on
+  the cold-start round and anneals to exactly ``m`` (gated separately).
+* **Eq. 4 scale identity** — through ``ocs.sampling_plan`` every sampler's
+  estimator coefficients satisfy ``scale_i = mask_i * w_i / p_i`` exactly.
+* **Monte-Carlo unbiasedness** — for samplers that give every non-zero-norm
+  client ``p_i > 0``, the fixed-key MC average of ``sum_i scale_i v_i``
+  matches ``sum_i w_i v_i``.  ``cyclic`` is exempt (deterministic windows
+  estimate the *window's* aggregate; unbiasedness holds over a full cycle,
+  not per round — see its docstring).
+* **permutation** — samplers that claim permutation equivariance commute
+  with client relabelling: ``p(perm(u)) == perm(p(u))`` for distinct norms.
+  ``cyclic`` is exempt (its schedule is index-based by construction).
+* **stateful determinism** — the stateful samplers' state trajectory is a
+  pure function of (seed, norms): same inputs => byte-identical
+  ``SamplerState`` at every round, hence byte-identical masks.
+
+Trait tables below are guarded by a set-equality test against
+``SAMPLERS.keys()`` so registering a new sampler without classifying it
+here fails loudly.  Validation regression (ISSUE 8 satellite): unknown
+sampler names raise ``ValueError`` listing the registry at config/factory
+time — ``sampling_plan``, ``RoundEngine`` and ``validate_shard_config``.
+
+Guarded like tests/test_sampling_plan.py: without hypothesis only the
+property tests skip.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, seed, settings, strategies as st
+except ImportError:
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def seed(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="property tests need hypothesis")
+
+from repro.core import ocs, sampling
+from repro.core.sampling import (
+    SAMPLERS,
+    STATEFUL_SAMPLERS,
+    SamplerState,
+    init_sampler_state,
+)
+
+_EPS = 1e-12
+
+# --- trait tables: every SAMPLERS entry must be classified ----------------
+
+# declared budget semantics: sum(p) == m, == n, or adaptive (threshold's
+# documented exception: n at cold start, annealing to m)
+BUDGET = {
+    "optimal": "m", "aocs": "m", "uniform": "m", "full": "n",
+    "clustered": "m", "cyclic": "m", "threshold": "adaptive",
+}
+# per-round MC unbiasedness of the Eq. 2 estimator (p_i > 0 wherever
+# u_i > 0); cyclic's deterministic windows are only unbiased over a cycle
+UNBIASED = ("optimal", "aocs", "uniform", "full", "clustered", "threshold")
+# permutation equivariance on distinct norms; cyclic is index-scheduled
+PERM_EQUIVARIANT = ("optimal", "aocs", "uniform", "full", "clustered",
+                    "threshold")
+
+
+def test_trait_tables_cover_zoo():
+    """Adding a SAMPLERS entry without classifying it here must fail."""
+    assert set(BUDGET) == set(SAMPLERS)
+    assert set(UNBIASED) <= set(SAMPLERS)
+    assert set(PERM_EQUIVARIANT) <= set(SAMPLERS)
+    assert set(STATEFUL_SAMPLERS) <= set(SAMPLERS)
+
+
+def _probs(name, u, m, state=None):
+    """One sampler's p vector (threading state for the stateful entries)."""
+    fn = SAMPLERS[name]
+    if name == "aocs":
+        return fn(u, m, 4), None
+    if sampling.is_stateful(name):
+        if state is None:
+            state = init_sampler_state()
+        return fn(u, m, state)
+    return fn(u, m), None
+
+
+def _norms(n=12, seed_=3):
+    rng = np.random.default_rng(seed_)
+    # distinct positive norms (ties would make rank-based samplers ambiguous)
+    return jnp.asarray(np.sort(rng.uniform(0.5, 5.0, n))[::-1].copy(),
+                       jnp.float32)
+
+
+# --- budget ----------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(k for k in SAMPLERS
+                                        if BUDGET[k] in ("m", "n")))
+def test_budget_sums_to_declared_target(name):
+    """sum(p) == the declared budget on norms with >= m non-zero entries."""
+    n, m = 12, 4
+    u = _norms(n)
+    p, _ = _probs(name, u, m)
+    target = float(m if BUDGET[name] == "m" else n)
+    assert np.isclose(float(jnp.sum(p)), target, atol=1e-4), (name, p)
+    assert float(jnp.min(p)) >= 0.0 and float(jnp.max(p)) <= 1.0
+
+
+@pytest.mark.parametrize("name", sorted(SAMPLERS))
+def test_zero_norm_clients_never_send_or_are_scheduled(name):
+    """Norm-driven samplers give u_i == 0 probability 0 (the paper's 'at
+    most m non-zero updates' remark); norm-oblivious ones (uniform, full,
+    cyclic) keep their schedule regardless."""
+    n, m = 10, 3
+    u = _norms(n)
+    u = u.at[jnp.asarray([1, 5])].set(0.0)
+    p, _ = _probs(name, u, m)
+    if name in ("uniform", "full", "cyclic"):
+        return  # norm-oblivious by contract
+    assert float(p[1]) == 0.0 and float(p[5]) == 0.0, name
+
+
+def test_threshold_budget_is_adaptive():
+    """The documented budget exception: cold start sends everyone
+    (sum(p) == n), then the EMA threshold anneals the sender count to
+    exactly m on stationary distinct norms."""
+    n, m = 12, 4
+    u = _norms(n)
+    state = init_sampler_state()
+    p, state = _probs("threshold", u, m, state)
+    assert float(jnp.sum(p)) == float(n)  # round 1: tau = 0, all send
+    for _ in range(40):
+        p, state = _probs("threshold", u, m, state)
+    assert float(jnp.sum(p)) == float(m), np.asarray(p)
+    # tau converged between the m-th and (m+1)-th largest norms
+    s = np.sort(np.asarray(u))
+    assert s[n - m - 1] < float(state.threshold) <= s[n - m]
+
+
+def test_clustered_budget_exact_with_few_nonzero():
+    """Clustered keeps sum(p) == m whenever >= m norms are non-zero: the
+    strided rank partition puts one of the top-m norms in every cluster, so
+    no cluster is ever empty of mass."""
+    n, m = 12, 4
+    u = jnp.zeros(n).at[jnp.asarray([0, 3, 7, 9])].set(
+        jnp.asarray([4.0, 3.0, 2.0, 1.0])
+    )
+    p, _ = _probs("clustered", u, m)
+    assert np.isclose(float(jnp.sum(p)), m, atol=1e-5)
+
+
+# --- Eq. 4 scale identity through sampling_plan ---------------------------
+
+@pytest.mark.parametrize("name", sorted(SAMPLERS))
+def test_eq4_scale_identity(name):
+    """scale_i == mask_i * w_i / p_i exactly, for every zoo entry, through
+    the one shared sampling_plan (q = 1 here; the availability variants are
+    swept by the engine-parity matrix)."""
+    n, m = 12, 4
+    u = _norms(n)
+    w = jnp.full((n,), 1.0 / n, jnp.float32)
+    plan = ocs.sampling_plan(u, w, m, jax.random.PRNGKey(5), sampler=name)
+    p = np.asarray(plan.probs, np.float64)
+    mask = np.asarray(plan.mask)
+    expect = np.where(mask & (p > _EPS), np.asarray(w, np.float64) / np.maximum(p, _EPS), 0.0)
+    np.testing.assert_allclose(np.asarray(plan.scale, np.float64), expect,
+                               rtol=1e-6, err_msg=name)
+    # the plan draws p in [0,1] and a mask subordinate to p's support
+    assert not np.any(mask & (p <= _EPS)), name
+
+
+# --- fixed-key Monte-Carlo unbiasedness -----------------------------------
+
+@pytest.mark.parametrize("name", sorted(UNBIASED))
+def test_mc_unbiasedness(name):
+    """E_key[ sum_i scale_i v_i ] == sum_i w_i v_i for samplers whose
+    support covers every non-zero-norm client (stateful entries run each
+    draw from the same fresh state: the per-round estimator is what the
+    contract covers)."""
+    n, m, draws = 12, 4, 400
+    u = _norms(n)
+    rng = np.random.default_rng(11)
+    v = jnp.asarray(rng.normal(size=n).astype(np.float32))  # per-client values
+    w = jnp.full((n,), 1.0 / n, jnp.float32)
+    truth = float(jnp.sum(w * v))
+
+    @jax.jit
+    def estimate(key):
+        plan = ocs.sampling_plan(u, w, m, key, sampler=name)
+        return jnp.sum(plan.scale * v)
+
+    keys = jax.random.split(jax.random.PRNGKey(42), draws)
+    ests = np.asarray(jax.vmap(estimate)(keys), np.float64)
+    se = ests.std() / np.sqrt(draws)
+    assert abs(ests.mean() - truth) <= max(5 * se, 5e-4), (
+        name, ests.mean(), truth, se
+    )
+
+
+# --- permutation equivariance ---------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(PERM_EQUIVARIANT))
+def test_permutation_equivariance(name):
+    """p(perm(u)) == perm(p(u)) on distinct norms — relabelling clients
+    relabels probabilities and changes nothing else.  Stateful entries use
+    a mid-anneal state so the check is non-trivial."""
+    n, m = 12, 4
+    u = _norms(n)
+    state = None
+    if sampling.is_stateful(name):
+        state = SamplerState(step=jnp.asarray(3, jnp.int32),
+                             threshold=jnp.asarray(float(np.median(np.asarray(u))),
+                                                   jnp.float32))
+    perm = jax.random.permutation(jax.random.PRNGKey(9), n)
+    p, _ = _probs(name, u, m, state)
+    p_perm, _ = _probs(name, u[perm], m, state)
+    np.testing.assert_allclose(np.asarray(p_perm), np.asarray(p)[np.asarray(perm)],
+                               atol=1e-6, err_msg=name)
+
+
+# --- cyclic schedule ------------------------------------------------------
+
+def test_cyclic_every_client_once_per_cycle():
+    """With m | n each client participates exactly once per ceil(n/m)-round
+    cycle, windows are disjoint, and the schedule is norm-oblivious."""
+    n, m = 12, 4
+    state = init_sampler_state()
+    seen = np.zeros(n, int)
+    for k in range(n // m):
+        p, state = _probs("cyclic", _norms(n, seed_=k), m, state)
+        p = np.asarray(p)
+        assert set(np.unique(p)) <= {0.0, 1.0}
+        assert p.sum() == m
+        seen += p.astype(int)
+    np.testing.assert_array_equal(seen, np.ones(n, int))
+    # next cycle wraps to the first window again
+    p, _ = _probs("cyclic", _norms(n), m, state)
+    np.testing.assert_array_equal(np.flatnonzero(np.asarray(p)), np.arange(m))
+
+
+# --- stateful determinism -------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(STATEFUL_SAMPLERS))
+def test_stateful_trajectory_deterministic(name):
+    """Same seed => byte-identical SamplerState trajectory and masks across
+    repeat runs (the property the golden-ledger sim gate builds on)."""
+    n, m, rounds = 10, 3, 6
+    w = jnp.full((n,), 1.0 / n, jnp.float32)
+
+    def run():
+        state, traj, masks = init_sampler_state(), [], []
+        for k in range(rounds):
+            u = _norms(n, seed_=100 + k)
+            plan = ocs.sampling_plan(
+                u, w, m, jax.random.PRNGKey(1000 + k), sampler=name,
+                sampler_state=state,
+            )
+            state = plan.sampler_state
+            traj.append(tuple(np.asarray(x).tobytes() for x in state))
+            masks.append(np.asarray(plan.mask).tobytes())
+        return traj, masks
+
+    t1, m1 = run()
+    t2, m2 = run()
+    assert t1 == t2 and m1 == m2
+    # the state actually advances: step counts rounds
+    assert t1[0] != t1[-1]
+
+
+def test_stateless_samplers_leave_state_none():
+    """sampling_plan leaves sampler_state None for every stateless entry —
+    the field is a carry slot, not a default side channel."""
+    u, w = _norms(8), jnp.full((8,), 0.125, jnp.float32)
+    for name in sorted(set(SAMPLERS) - set(STATEFUL_SAMPLERS)):
+        plan = ocs.sampling_plan(u, w, 3, jax.random.PRNGKey(0), sampler=name)
+        assert plan.sampler_state is None, name
+
+
+# --- validation regression (ISSUE 8 satellite) ----------------------------
+
+def test_unknown_sampler_raises_listing_registry():
+    """An unknown sampler name raises ValueError naming every SAMPLERS key —
+    at sampling_plan, at RoundEngine construction, and at
+    validate_shard_config — all before any PRNG use."""
+    u, w = _norms(8), jnp.full((8,), 0.125, jnp.float32)
+    with pytest.raises(ValueError, match="unknown sampler"):
+        ocs.sampling_plan(u, w, 3, jax.random.PRNGKey(0), sampler="bogus")
+    try:
+        ocs.sampling_plan(u, w, 3, jax.random.PRNGKey(0), sampler="bogus")
+    except ValueError as e:
+        for known in SAMPLERS:
+            assert known in str(e)
+
+    from repro.configs.base import FLConfig
+    from repro.fl.engine import RoundEngine
+    from repro.fl.shard_round import validate_shard_config
+
+    fl = FLConfig(n_clients=8, expected_clients=3, sampler="bogus")
+    with pytest.raises(ValueError, match="unknown sampler"):
+        RoundEngine(lambda p, b: jnp.zeros(()), fl)
+    with pytest.raises(ValueError, match="unknown sampler"):
+        validate_shard_config(fl, 1)
+
+
+def test_callable_sampler_passes_through():
+    """Custom callables remain first-class: resolve_sampler returns them
+    untouched and sampling_plan runs them."""
+    custom = lambda u, m: jnp.full_like(u, 0.5)
+    assert sampling.resolve_sampler(custom) is custom
+    u, w = _norms(8), jnp.full((8,), 0.125, jnp.float32)
+    plan = ocs.sampling_plan(u, w, 4, jax.random.PRNGKey(0), sampler=custom)
+    np.testing.assert_allclose(np.asarray(plan.probs), 0.5)
+
+
+# --- hypothesis properties ------------------------------------------------
+
+norm_vectors = st.lists(
+    st.floats(min_value=0.0, max_value=1e4, allow_nan=False, width=32),
+    min_size=2,
+    max_size=48,
+)
+
+
+@seed(20260808)
+@settings(max_examples=60, deadline=None)
+@given(norm_vectors)
+def test_property_probabilities_in_unit_interval(u_list):
+    """Every zoo entry maps any norm vector into [0, 1]^n."""
+    u = jnp.asarray(u_list, jnp.float32)
+    m = max(1, len(u_list) // 3)
+    for name in sorted(SAMPLERS):
+        p, _ = _probs(name, u, m)
+        p = np.asarray(p, np.float64)
+        assert np.all(p >= 0.0) and np.all(p <= 1.0 + 1e-6), (name, p)
+
+
+@seed(20260809)
+@settings(max_examples=60, deadline=None)
+@given(norm_vectors)
+def test_property_clustered_budget(u_list):
+    """Clustered: sum(p) == m whenever >= m entries are non-zero (the
+    stratified-partition guarantee), never above m otherwise."""
+    u = jnp.asarray(u_list, jnp.float32)
+    m = max(1, len(u_list) // 3)
+    p, _ = _probs("clustered", u, m)
+    total = float(jnp.sum(p))
+    if int(np.sum(np.asarray(u) > _EPS)) >= m:
+        assert np.isclose(total, m, atol=1e-3), (u_list, total)
+    else:
+        assert total <= m + 1e-3

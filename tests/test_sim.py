@@ -330,6 +330,37 @@ def test_straggler_shard_cell_matches_unsharded():
     assert led.dropouts == led2.dropouts
 
 
+def test_threshold_cell_deterministic_across_modes():
+    """Golden-ledger determinism regression (ISSUE 8 satellite): a stateful
+    zoo-sampler cell produces a byte-identical ledger JSON — masks included,
+    timing excluded — across repeat runs AND across all three driver modes,
+    so the SamplerState carry (jitted feedback in host/prefetch, lax.scan
+    carry slot in scan mode) is a pure function of the seed everywhere."""
+    name = "femnist1-fedavg-threshold"
+    docs, reps = {}, {}
+    for mode in MODES:
+        _, led = run_scenario(name, reduced=True, mode=mode, rounds=4,
+                              rounds_per_scan=2, seed=11)
+        validate_ledger(led.to_json())
+        docs[mode] = json.dumps(_strip_timing(led.to_json(include_masks=True)),
+                                sort_keys=True)
+        _, led2 = run_scenario(name, reduced=True, mode=mode, rounds=4,
+                               rounds_per_scan=2, seed=11)
+        reps[mode] = json.dumps(_strip_timing(led2.to_json(include_masks=True)),
+                                sort_keys=True)
+    for mode in MODES:
+        assert docs[mode] == reps[mode], f"{mode}: same seed, different ledger"
+        same = json.dumps(_strip_timing(json.loads(docs[mode]),
+                                        mode_identity=True), sort_keys=True)
+        ref = json.dumps(_strip_timing(json.loads(docs["host"]),
+                                       mode_identity=True), sort_keys=True)
+        assert same == ref, f"{mode}: diverged from host"
+    # the threshold's cold start actually fired: round 1 sends everyone
+    # (8/8 on the reduced cell)
+    doc = json.loads(docs["host"])
+    assert doc["metrics"]["sent"][0] == doc["fl"]["n_clients"]
+
+
 def test_ledger_schema2_system_series(small_ds, tmp_path):
     """validate_ledger's schema-2 additions: the system-counter series are
     required, length-checked and sign-checked, and survive a JSON

@@ -24,6 +24,10 @@ Usage:
         --kind sim \
         --fresh benchmarks/artifacts/sim_smoke.json \
         --baseline benchmarks/artifacts/sim.json
+    python tools/check_bench.py \
+        --kind sampler_frontier \
+        --fresh benchmarks/artifacts/sampler_frontier_smoke.json \
+        --baseline benchmarks/artifacts/sampler_frontier.json
 
 Exit 0 when every check passes, 1 with a per-failure report otherwise.
 """
@@ -54,6 +58,13 @@ SIM_MODES = ("host", "prefetch", "scan", "host+shard", "prefetch+shard",
 # schema-3 straggler columns additionally carry the system-counter totals
 SIM_STRAGGLER_KEYS = {"over_selected_total", "deadline_misses_total",
                       "dropouts_total"}
+
+SAMPLER_FRONTIER_SCHEMA = 1
+# every sampler-zoo entry the frontier benchmark must emit
+FRONTIER_SAMPLERS = ("aocs", "clustered", "cyclic", "full", "optimal",
+                     "threshold", "uniform")
+FRONTIER_KEYS = {"sampler", "loss", "uplink_bits", "final_loss",
+                 "total_uplink_bits", "sent_total", "rounds_per_sec"}
 
 
 def _load(path):
@@ -131,7 +142,55 @@ def check_sim(fresh: dict, baseline: dict) -> list[str]:
     return errs
 
 
-CHECKS = {"round_engine": check_round_engine, "sim": check_sim}
+def check_sampler_frontier(fresh: dict, baseline: dict) -> list[str]:
+    """Failures for the sampler-frontier artifact pair (empty list = pass).
+
+    Structure only, no wall-clock: schema marker, full sampler-zoo coverage
+    in BOTH artifacts, per-sampler key sets, aligned finite frontier series
+    with non-decreasing cumulative uplink, and the full-participation
+    ceiling (no sampler bills more uplink than 'full' — threshold may meet
+    it with equality)."""
+    errs = []
+    for name, art in (("fresh", fresh), ("baseline", baseline)):
+        if art.get("schema") != SAMPLER_FRONTIER_SCHEMA:
+            errs.append(f"{name}: schema {art.get('schema')!r}, "
+                        f"want {SAMPLER_FRONTIER_SCHEMA}")
+        samplers = art.get("samplers", {})
+        for s in FRONTIER_SAMPLERS:
+            if s not in samplers:
+                errs.append(f"{name}: sampler {s!r} missing from the frontier")
+                continue
+            entry = samplers[s]
+            missing = FRONTIER_KEYS - set(entry)
+            if missing:
+                errs.append(f"{name}: sampler {s} missing keys {sorted(missing)}")
+                continue
+            loss, bits = entry["loss"], entry["uplink_bits"]
+            if not (isinstance(loss, list) and loss):
+                errs.append(f"{name}: sampler {s} has an empty loss series")
+                continue
+            if len(loss) != len(bits):
+                errs.append(f"{name}: sampler {s} frontier series misaligned "
+                            f"({len(loss)} losses vs {len(bits)} bit marks)")
+            if not all(isinstance(x, (int, float)) and x == x
+                       and abs(x) != float("inf") for x in loss):
+                errs.append(f"{name}: sampler {s} has non-finite losses")
+            if any(b2 < b1 for b1, b2 in zip(bits, bits[1:])):
+                errs.append(f"{name}: sampler {s} cumulative uplink decreases")
+            if not entry["rounds_per_sec"] > 0:
+                errs.append(f"{name}: sampler {s} rounds_per_sec not positive")
+        full = samplers.get("full", {}).get("total_uplink_bits")
+        if full is not None:
+            for s, entry in samplers.items():
+                if entry.get("total_uplink_bits", 0) > full:
+                    errs.append(
+                        f"{name}: sampler {s} bills more uplink than full "
+                        f"participation ({entry['total_uplink_bits']} > {full})")
+    return errs
+
+
+CHECKS = {"round_engine": check_round_engine, "sim": check_sim,
+          "sampler_frontier": check_sampler_frontier}
 
 
 def main(argv=None) -> int:

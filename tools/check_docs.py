@@ -37,6 +37,16 @@ DOCSTRING_CONTRACT = [
     ("src/repro/core/ocs.py", "sample_and_aggregate", ["mask_i * (w_i / p_i) * U_i"]),
     ("src/repro/core/sampling.py", "optimal_probabilities", ["Eq. (7)"]),
     ("src/repro/core/sampling.py", "aocs_probabilities", []),
+    # the sampler zoo: every baseline cites its source paper, the state
+    # object documents its carry, the resolver documents its failure mode
+    ("src/repro/core/sampling.py", "clustered_probabilities",
+     ["2105.05883", "cluster"]),
+    ("src/repro/core/sampling.py", "cyclic_probabilities",
+     ["2302.03662", "window"]),
+    ("src/repro/core/sampling.py", "threshold_probabilities",
+     ["2007.15197", "threshold"]),
+    ("src/repro/core/sampling.py", "SamplerState", ["ClientState"]),
+    ("src/repro/core/sampling.py", "resolve_sampler", ["ValueError", "SAMPLERS"]),
     ("src/repro/core/improvement.py", "improvement_factors", ["alpha", "gamma"]),
     ("src/repro/kernels/ops.py", None, ["Eq. 2", "docs/paper_map.md"]),
     ("src/repro/kernels/ops.py", "masked_scale_aggregate", ["scale_i * U_i"]),
@@ -121,6 +131,11 @@ ARCHITECTURE_MUSTS = [
     # deadline/over-selection semantics and the unbiasedness rescale
     "Client-state layer", "p_up / (p_up + p_down)", "AvailabilityTrace",
     "include_prob", "over-selection", "deadline", "dropout",
+    # the sampler zoo: the pluggable SAMPLERS contract, the SamplerState
+    # carry through the three driver modes, and the per-sampler invariants
+    # (threshold's adaptive budget, cyclic's index schedule)
+    "Sampler zoo", "SamplerState", "STATEFUL_SAMPLERS", "adaptive budget",
+    "test_sampler_contract",
 ]
 # docs/paper_map.md must keep the Sec. 4 experiment-grid rows that bind the
 # paper's evaluation setup to the sim subsystem, plus the mesh-path rows.
@@ -131,6 +146,9 @@ PAPER_MAP_MUSTS = [
     "compress_norm_scale_aggregate",
     # the Appendix-E generalization row: the Markov client-state layer
     "Appendix E — generalized", "step_client_state", "AvailabilityTrace",
+    # the sampler-zoo rows: each baseline bound to its source paper
+    "2105.05883", "2302.03662", "2007.15197", "clustered_probabilities",
+    "cyclic_probabilities", "threshold_probabilities",
 ]
 # docs/benchmarks.md: the run recipe, the schema-4 field contract, and the
 # default-gating policy — enforced so the CI docs job catches drift between
@@ -143,6 +161,9 @@ BENCHMARKS_MUSTS = [
     "host+shard", "prefetch+shard", "mesh_axis_size", "build_client_mesh",
     # sim artifact schema 3: the straggler columns + system counters
     "host+straggler", "deadline_misses_total", "over_selected_total",
+    # sampler-frontier artifact schema 1: the cross-sampler bits frontier
+    "bench_sampler_frontier", "sampler_frontier.json", "total_uplink_bits",
+    "loss-vs-cumulative-uplink-bits",
 ]
 README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md"]
 
