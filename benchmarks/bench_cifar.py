@@ -29,7 +29,7 @@ def run(rounds=40, n=32, m=3):
         "ocs_m3": dict(sampler="aocs", m=m, lr=0.0625),
         "uniform_m3": dict(sampler="uniform", m=m, lr=0.015625),
     }.items():
-        t0 = time.time()
+        t0 = time.perf_counter()
         h = run_method(ds, ev, init, loss, acc, rounds=rounds, n=n,
                        local_steps=5, **kw)
         accs = h.acc
@@ -37,7 +37,7 @@ def run(rounds=40, n=32, m=3):
             "final_acc": accs[-1], "final_loss": h.loss[-1],
             "alpha_mean": float(np.mean(h.alpha[5:])), "total_bits": h.bits[-1],
         }
-        csv_line(f"cifar_{name}", (time.time() - t0) / rounds * 1e6,
+        csv_line(f"cifar_{name}", (time.perf_counter() - t0) / rounds * 1e6,
                  f"acc={accs[-1]:.3f};alpha={results[name]['alpha_mean']:.2f}")
     with open(os.path.join(ART, "cifar.json"), "w") as f:
         json.dump(results, f, indent=1)

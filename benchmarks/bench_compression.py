@@ -41,7 +41,7 @@ def run(rounds=40, n=32, m=3):
             compression=kw.get("compression", "none"),
             compression_param=kw.get("cparam", 0.0),
         )
-        t0 = time.time()
+        t0 = time.perf_counter()
         params, h = run_training(
             ds, init, loss, fl, rounds=rounds, batch_size=20,
             eval_fn=jax.jit(acc), eval_batch=ev, eval_every=10, seed=1,
@@ -49,7 +49,7 @@ def run(rounds=40, n=32, m=3):
         accs = h.acc
         results[name] = {"final_acc": accs[-1], "total_bits": h.bits[-1],
                          "final_loss": h.loss[-1]}
-        csv_line(f"compression_{name}", (time.time() - t0) / rounds * 1e6,
+        csv_line(f"compression_{name}", (time.perf_counter() - t0) / rounds * 1e6,
                  f"acc={accs[-1]:.3f};bits={h.bits[-1]/1e6:.1f}M")
     with open(os.path.join(ART, "compression.json"), "w") as f:
         json.dump(results, f, indent=1)

@@ -38,7 +38,7 @@ def run(rounds=50, datasets=(1, 2, 3), target=0.85, n=32):
             "uniform_m6": dict(sampler="uniform", m=6, lr=0.0625),
         }
         for name, kw in methods.items():
-            t0 = time.time()
+            t0 = time.perf_counter()
             h = run_method(ds, ev, init, loss, acc, rounds=rounds, n=n, **kw)
             accs = h.acc
             btt = bits_to_target(h, target)
@@ -53,7 +53,7 @@ def run(rounds=50, datasets=(1, 2, 3), target=0.85, n=32):
                 "bits_curve": h.bits[::5],
                 "loss_curve": h.loss[::5],
             }
-            us = (time.time() - t0) / rounds * 1e6
+            us = (time.perf_counter() - t0) / rounds * 1e6
             csv_line(
                 f"femnist_d{did}_{name}", us,
                 f"acc={accs[-1]:.3f};bits={h.bits[-1]/1e6:.0f}M;"

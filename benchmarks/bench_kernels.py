@@ -19,11 +19,11 @@ from repro.models.layers import chunked_attention
 def _time(fn, *args, reps=10):
     fn(*args)
     jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run():

@@ -93,11 +93,11 @@ def _time_step(step, params, batch, weights, key, reps):
     """Returns (us_per_round, round output for `key` itself)."""
     metrics_out = step(params, (), batch, weights, key)
     jax.block_until_ready(metrics_out)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(reps):
         out = step(params, (), batch, weights, jax.random.fold_in(key, i))
     jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6, metrics_out
+    return (time.perf_counter() - t0) / reps * 1e6, metrics_out
 
 
 def run(n=32, m=6, local_steps=4, batch_size=20, reps=5, seed=0, scan_group=8,

@@ -40,7 +40,7 @@ def run(rounds=80, pool=240, hidden=128):
         ("n128_uniform_m12", dict(sampler="uniform", m=12, lr=0.5), 128),
     ]
     for name, kw, n in grid:
-        t0 = time.time()
+        t0 = time.perf_counter()
         h = run_method(ds, ev, init, loss, acc, rounds=rounds, n=n,
                        local_steps=6, batch_size=8, **kw)
         accs = h.acc
@@ -49,7 +49,7 @@ def run(rounds=80, pool=240, hidden=128):
             "alpha_mean": float(np.mean(h.alpha[5:])), "total_bits": h.bits[-1],
             "acc_rounds": h.acc_rounds, "acc_curve": h.acc, "bits_curve": h.bits[::5],
         }
-        us = (time.time() - t0) / rounds * 1e6
+        us = (time.perf_counter() - t0) / rounds * 1e6
         csv_line(f"shakespeare_{name}", us,
                  f"acc={accs[-1]:.3f};loss={h.loss[-1]:.3f};bits={h.bits[-1]/1e6:.0f}M")
     with open(os.path.join(ART, "shakespeare.json"), "w") as f:

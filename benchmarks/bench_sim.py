@@ -38,12 +38,16 @@ columns measure the client-state overhead).  Their entries carry the
 system-counter totals (``over_selected_total`` / ``deadline_misses_total`` /
 ``dropouts_total``).
 
-Artifact: ``benchmarks/artifacts/sim.json`` (schema 3, field contract in
-docs/benchmarks.md; schema 2 lacked the ``*+straggler`` columns, schema 1
-the ``*+shard`` modes and ``workload.mesh_axis_size``).  ``--smoke`` runs
-the reduced scenarios and asserts the artifact contract without timing gates
-(part of the CI ``bench-regression`` job, which also diffs the fresh
-artifact against the committed baseline via tools/check_bench.py).
+Artifact: ``benchmarks/artifacts/sim.json`` (schema 4, field contract in
+docs/benchmarks.md; schema 3 lacked the ``ledger_schema`` marker, schema 2
+the ``*+straggler`` columns, schema 1 the ``*+shard`` modes and
+``workload.mesh_axis_size``).  The ``ledger_schema`` field records the
+``repro.sim.driver.SIM_SCHEMA`` the runs were validated against — the
+bench artifact schema and the ledger schema version independently, so the
+gate can notice either drifting.  ``--smoke`` runs the reduced scenarios
+and asserts the artifact contract without timing gates (part of the CI
+``bench-regression`` job, which also diffs the fresh artifact against the
+committed baseline via tools/check_bench.py).
 """
 
 from __future__ import annotations
@@ -55,11 +59,13 @@ import sys
 import numpy as np
 
 from benchmarks.common import csv_line
-from repro.sim.driver import build_client_mesh, run_scenario, validate_ledger
+from repro.sim.driver import (
+    SIM_SCHEMA, build_client_mesh, run_scenario, validate_ledger,
+)
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
-SCHEMA = 3
+SCHEMA = 4
 
 # keys every per-mode entry must carry (checked by smoke() / tools/check_bench.py)
 MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s", "sent_total"}
@@ -89,7 +95,7 @@ def run(
     assert_speed: bool = True,
 ):
     """Time the three driver modes plus the shard and straggler columns;
-    writes the schema-3 artifact.
+    writes the schema-4 artifact.
 
     Each mode runs ``reps`` times and records its best steady-state
     ``rounds_per_sec`` (per-run variance on a shared CPU is a few percent;
@@ -102,7 +108,8 @@ def run(
     a different scenario draws different cohorts.
     """
     os.makedirs(ART, exist_ok=True)
-    results = {"schema": SCHEMA, "scenario": scenario,
+    results = {"schema": SCHEMA, "ledger_schema": SIM_SCHEMA,
+               "scenario": scenario,
                "straggler_scenario": straggler_scenario,
                "workload": None, "modes": {}}
     ledgers = {}
@@ -190,7 +197,7 @@ def run(
 
 
 def smoke():
-    """CI gate: reduced-scenario run + schema-3 artifact contract assertions.
+    """CI gate: reduced-scenario run + schema-4 artifact contract assertions.
 
     Checks the artifact shape (schema marker, per-mode key set, the scan
     block size, pool bytes on the pooled modes, the shard column's mesh axis
@@ -203,6 +210,7 @@ def smoke():
     res = run(rounds=6, rounds_per_scan=3, reps=1, reduced=True,
               artifact="sim_smoke.json", assert_speed=False)
     assert res["schema"] == SCHEMA, res["schema"]
+    assert res["ledger_schema"] == SIM_SCHEMA, res["ledger_schema"]
     assert {"rounds", "batch_size", "pool_clients", "model_dim", "fl",
             "backend_platform"} <= set(res["workload"])
     for mode in ("host", "prefetch", "scan", "host+shard", "prefetch+shard",
@@ -219,7 +227,7 @@ def smoke():
         assert STRAGGLER_KEYS <= set(entry), mode
         for k in STRAGGLER_KEYS:
             assert entry[k] >= 0, (mode, k)
-    print("sim bench smoke OK (schema 3)")
+    print("sim bench smoke OK (schema 4)")
 
 
 if __name__ == "__main__":

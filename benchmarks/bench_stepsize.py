@@ -23,7 +23,7 @@ def run(rounds=25, n=32, m=3):
     init, loss, acc = mlp_classifier(ds.input_dim, ds.num_classes, hidden=64)
     lrs = [2.0**-k for k in range(5, -1, -1)]
     results = {}
-    t0 = time.time()
+    t0 = time.perf_counter()
     for sampler in ("aocs", "uniform"):
         per_lr = {}
         for lr in lrs:
@@ -39,7 +39,7 @@ def run(rounds=25, n=32, m=3):
             "best_lr": best_lr,
             "best_loss": per_lr[best_lr],
         }
-    us = (time.time() - t0) / (2 * len(lrs) * rounds) * 1e6
+    us = (time.perf_counter() - t0) / (2 * len(lrs) * rounds) * 1e6
     csv_line(
         "stepsize_robustness", us,
         f"ocs_max_stable_lr={results['aocs']['max_stable_lr']};"

@@ -41,10 +41,10 @@ def run(n=128, m=8, trials=200):
     f1 = jax.jit(lambda x: sampling.optimal_probabilities(x, m))
     f2 = jax.jit(lambda x: sampling.aocs_probabilities(x, m, 4))
     f1(u).block_until_ready(); f2(u).block_until_ready()
-    t0 = time.time(); [f1(u).block_until_ready() for _ in range(300)]
-    t_exact = (time.time() - t0) / 300 * 1e6
-    t0 = time.time(); [f2(u).block_until_ready() for _ in range(300)]
-    t_aocs = (time.time() - t0) / 300 * 1e6
+    t0 = time.perf_counter(); [f1(u).block_until_ready() for _ in range(300)]
+    t_exact = (time.perf_counter() - t0) / 300 * 1e6
+    t0 = time.perf_counter(); [f2(u).block_until_ready() for _ in range(300)]
+    t_aocs = (time.perf_counter() - t0) / 300 * 1e6
     for r in rows:
         csv_line(f"variance_sigma{r['sigma']}", t_aocs,
                  f"alpha={r['alpha']:.3f};gamma={r['gamma']:.3f};"

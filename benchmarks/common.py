@@ -22,13 +22,13 @@ def run_method(ds, ev, init, loss, acc, *, sampler, m, lr, rounds, n=32,
                local_steps=8, batch_size=20, seed=1, eval_every=5):
     fl = FLConfig(n_clients=n, expected_clients=m, sampler=sampler,
                   local_steps=local_steps, lr_local=lr)
-    t0 = time.time()
+    t0 = time.perf_counter()
     params, hist = run_training(
         ds, init, loss, fl, rounds=rounds, batch_size=batch_size,
         eval_fn=jax.jit(acc) if acc else None, eval_batch=ev,
         eval_every=eval_every, seed=seed,
     )
-    hist.wall_s = time.time() - t0
+    hist.wall_s = time.perf_counter() - t0
     return hist
 
 

@@ -69,10 +69,10 @@ def main() -> None:
     for name, fn in suites.items():
         if name not in only:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             fn()
-            print(f"# suite {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+            print(f"# suite {name} done in {time.perf_counter()-t0:.0f}s", file=sys.stderr)
         except Exception:
             failures.append(name)
             traceback.print_exc()

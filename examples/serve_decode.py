@@ -36,7 +36,7 @@ def main():
 
         prefill = jax.jit(lambda p, bb: model.prefill(p, bb, cache_len))
         decode = jax.jit(model.decode_step)
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits, cache = prefill(params, batch)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         toks = [tok]
@@ -48,7 +48,7 @@ def main():
         out = np.asarray(jnp.concatenate(toks, 1))
         cache_elems = sum(x.size for x in jax.tree_util.tree_leaves(cache))
         print(f"{name:18s} [{cfg.family:6s}] generated {out.shape} "
-              f"cache={cache_elems/1e3:.0f}K elems  ({time.time()-t0:.1f}s)")
+              f"cache={cache_elems/1e3:.0f}K elems  ({time.perf_counter()-t0:.1f}s)")
 
 
 if __name__ == "__main__":

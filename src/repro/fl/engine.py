@@ -61,6 +61,7 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig
 from repro.core import ocs, sampling
 from repro.kernels import update_cache
+from repro.obs.gap import flat_gap_stats, tree_gap_stats
 
 MEMORY_POLICIES = ("vmap", "scan")
 
@@ -76,7 +77,10 @@ class RoundMetrics(NamedTuple):
     on-time clients lost to mid-round faults.  ``sampler_state`` is the
     advanced :class:`~repro.core.sampling.SamplerState` of a stateful
     sampler (None otherwise) — callers feed it back into the next round's
-    ``round_step`` exactly like ``ClientState``.
+    ``round_step`` exactly like ``ClientState``.  ``gap`` is the online
+    Eq. 2 diagnostic (:class:`~repro.obs.gap.GapStats`: ``‖ŝ − s‖²`` and
+    ``‖s‖²`` against the full-participation aggregate), populated only by a
+    ``make_step(diag=True)`` step — None on the default path.
     """
 
     loss: jax.Array
@@ -91,6 +95,24 @@ class RoundMetrics(NamedTuple):
     deadline_misses: jax.Array
     dropouts: jax.Array
     sampler_state: Any = None
+    gap: Any = None
+
+
+class VmapPhases(NamedTuple):
+    """The vmap round as five composable phase callables (obs contract).
+
+    Produced by :meth:`RoundEngine.vmap_phases`; composing them in order —
+    ``local_update`` → ``compress`` → ``sample`` → ``aggregate`` →
+    ``server_opt`` — reproduces the monolithic round step op-for-op.  The
+    phased executor (repro/obs/phased.py) jits each callable separately so
+    phase spans measure real, ``block_until_ready``-bounded device work.
+    """
+
+    local_update: Callable   # (params, batch) -> (updates, losses)
+    compress: Callable       # (updates, k_comp) -> (sendables, mats)
+    sample: Callable         # (sendables, weights, k_sample, trace, st) -> plan
+    aggregate: Callable      # (params, updates, sendables, mats, scale) -> agg
+    server_opt: Callable     # (params, opt_state, agg) -> (params, opt_state)
 
 
 def client_compression_material(updates: Any, keys: jax.Array, fl: FLConfig):
@@ -312,7 +334,8 @@ class RoundEngine:
             return new_params, opt_state
         return self.server_opt.update(aggregate, opt_state, params)
 
-    def _metrics(self, plan: ocs.SamplingPlan, losses, trace=None) -> RoundMetrics:
+    def _metrics(self, plan: ocs.SamplingPlan, losses, trace=None,
+                 gap=None) -> RoundMetrics:
         if trace is None:
             misses = drops = jnp.zeros((), jnp.int32)
         else:
@@ -333,6 +356,7 @@ class RoundEngine:
             deadline_misses=misses,
             dropouts=drops,
             sampler_state=plan.sampler_state,
+            gap=gap,
         )
 
     def _plan(self, u, weights, k_sample, trace=None,
@@ -347,65 +371,125 @@ class RoundEngine:
 
     # -- memory policies ----------------------------------------------------
 
-    def make_step(self) -> Callable:
-        return self._make_vmap_step() if self.memory == "vmap" else self._make_scan_step()
+    def make_step(self, diag: bool = False) -> Callable:
+        """The jit-able ``round_step`` for this engine's (memory, backend).
 
-    def _make_vmap_step(self):
+        ``diag=True`` builds the observability variant: the step additionally
+        contracts the full-participation aggregate ``s = sum_i w_i U_i``
+        through the SAME backend code path (``scale = w`` instead of the
+        plan's scale) and returns Eq. 2's realized ``‖ŝ − s‖²`` in
+        ``RoundMetrics.gap``.  The default ``diag=False`` step is the exact
+        pre-obs computation — identical op order, identical jaxpr — so
+        telemetry off changes nothing (gated by tests/test_obs.py).
+        """
+        if self.memory == "vmap":
+            return self._make_vmap_step(diag)
+        return self._make_scan_step(diag)
+
+    def vmap_phases(self) -> "VmapPhases":
+        """The vmap round broken into its five obs phases (see ``PHASES``).
+
+        Returns :class:`VmapPhases` — ``local_update`` / ``compress`` /
+        ``sample`` / ``aggregate`` / ``server_opt`` callables that compose
+        into exactly the monolithic ``_make_vmap_step`` computation (same
+        ops, same order), so the phased executor
+        (:func:`repro.obs.phased.make_phased_step`) can jit each phase
+        separately and time it with ``block_until_ready``-bounded spans
+        while the masks stay bitwise identical to the fused step.
+        """
+        if self.memory != "vmap":
+            raise ValueError(
+                f"vmap_phases() needs memory='vmap', engine has {self.memory!r}"
+            )
         from repro.kernels import ops as kops
 
         fl = self.fl
 
+        def local_update(params, batch):
+            return jax.vmap(self._local_update, in_axes=(None, 0))(
+                params, batch
+            )
+
+        def compress(updates, k_comp):
+            # paper future-work: unbiased compression composed with OCS —
+            # each client compresses BEFORE norms/sampling (it reports the
+            # norm of what it would actually send).  Returns (sendables,
+            # material); a 'none' compressor sends the raw updates with no
+            # material, so this phase is a true no-op for it.
+            if fl.compression == "none":
+                return updates, ()
+            n = jax.tree_util.tree_leaves(updates)[0].shape[0]
+            comp_keys = jax.random.split(k_comp, n)
+            mats = client_compression_material(updates, comp_keys, fl)
+            return client_apply_compression(updates, mats, fl), mats
+
+        def sample(sendables, weights, k_sample, trace=None,
+                   sampler_state=None):
+            # norms of the transmitted values via the shared jnp path —
+            # bitwise identical across engines, hence identical masks.
+            u = ocs.client_norms(sendables, weights)
+            return self._plan(u, weights, k_sample, trace, sampler_state)
+
+        def aggregate(params, updates, sendables, mats, scale):
+            # with the pallas backend under compression the contraction
+            # re-applies the compressor INSIDE the fused tile stream from
+            # the raw updates + the same material, so no compressed (n, D)
+            # matrix is ever written for the aggregate.
+            if fl.compression == "none":
+                return ocs.aggregate_updates(
+                    updates, scale, backend=self.backend,
+                    interpret=self.interpret,
+                )
+            if self.backend == "pallas":
+                flat = kops.tree_to_client_matrix(updates)
+                mat_flats = tuple(
+                    kops.tree_to_client_matrix(m) for m in mats
+                )
+                _, agg_flat = kops.compress_norm_scale_aggregate(
+                    flat, scale, mat_flats, fl.compression,
+                    fl.compression_param, interpret=self.interpret,
+                )
+                return kops.client_matrix_to_tree(
+                    agg_flat, params, strip_client_axis=False
+                )
+            return ocs.aggregate_updates(
+                sendables, scale, backend="jnp", interpret=self.interpret,
+            )
+
+        return VmapPhases(
+            local_update=local_update,
+            compress=compress,
+            sample=sample,
+            aggregate=aggregate,
+            server_opt=self._apply_server,
+        )
+
+    def _make_vmap_step(self, diag: bool = False):
+        ph = self.vmap_phases()
+
         def round_step(params, opt_state, batch, weights, key, trace=None,
                        sampler_state=None):
             k_sample, k_comp = jax.random.split(key)
-            updates, losses = jax.vmap(self._local_update, in_axes=(None, 0))(
-                params, batch
-            )
-            if fl.compression == "none":
-                u = ocs.client_norms(updates, weights)
-                plan = self._plan(u, weights, k_sample, trace, sampler_state)
-                aggregate = ocs.aggregate_updates(
-                    updates, plan.scale, backend=self.backend,
-                    interpret=self.interpret,
-                )
-            else:
-                # paper future-work: unbiased compression composed with OCS —
-                # each client compresses BEFORE norms/sampling (it reports
-                # the norm of what it would actually send).  The plan's norms
-                # always come from the shared jnp path on the compressed
-                # values (bitwise identical across engines); with the pallas
-                # backend the post-plan aggregate re-applies the compressor
-                # INSIDE the fused tile stream from the raw updates + the
-                # same material, so no compressed (n, D) matrix is ever
-                # written for the contraction.
-                comp_keys = jax.random.split(k_comp, weights.shape[0])
-                mats = client_compression_material(updates, comp_keys, fl)
-                compressed = client_apply_compression(updates, mats, fl)
-                u = ocs.client_norms(compressed, weights)
-                plan = self._plan(u, weights, k_sample, trace, sampler_state)
-                if self.backend == "pallas":
-                    flat = kops.tree_to_client_matrix(updates)
-                    mat_flats = tuple(
-                        kops.tree_to_client_matrix(m) for m in mats
-                    )
-                    _, agg_flat = kops.compress_norm_scale_aggregate(
-                        flat, plan.scale, mat_flats, fl.compression,
-                        fl.compression_param, interpret=self.interpret,
-                    )
-                    aggregate = kops.client_matrix_to_tree(
-                        agg_flat, params, strip_client_axis=False
-                    )
-                else:
-                    aggregate = ocs.aggregate_updates(
-                        compressed, plan.scale, backend="jnp",
-                        interpret=self.interpret,
-                    )
-            new_params, new_opt = self._apply_server(params, opt_state, aggregate)
-            return new_params, new_opt, self._metrics(plan, losses, trace)
+            updates, losses = ph.local_update(params, batch)
+            sendables, mats = ph.compress(updates, k_comp)
+            plan = ph.sample(sendables, weights, k_sample, trace,
+                             sampler_state)
+            aggregate = ph.aggregate(params, updates, sendables, mats,
+                                     plan.scale)
+            gap = None
+            if diag:
+                # full-participation reference through the identical backend
+                # path; at sampler='full' plan.scale == w bitwise, so the
+                # recorded gap is exactly zero (tests/test_obs.py).
+                full = ph.aggregate(params, updates, sendables, mats,
+                                    weights.astype(jnp.float32))
+                gap = tree_gap_stats(aggregate, full)
+            new_params, new_opt = ph.server_opt(params, opt_state, aggregate)
+            return new_params, new_opt, self._metrics(plan, losses, trace, gap)
 
         return round_step
 
-    def _make_scan_step(self):
+    def _make_scan_step(self, diag: bool = False):
         from repro.kernels import ops as kops
 
         fl = self.fl
@@ -523,21 +607,80 @@ class RoundEngine:
                 )
                 return acc + part, None
 
-            if n_cached:
-                agg_flat, _ = jax.lax.scan(
-                    cached_agg, agg_flat, (cache, scale_g[:n_cached])
-                )
-            if n_spill:
-                agg_flat, _ = jax.lax.scan(
-                    spill_agg, agg_flat,
-                    (take(gbatch, n_cached, n_groups), scale_g[n_cached:],
-                     comp_keys[n_cached:]),
-                )
+            gap = None
+            if not diag:
+                if n_cached:
+                    agg_flat, _ = jax.lax.scan(
+                        cached_agg, agg_flat, (cache, scale_g[:n_cached])
+                    )
+                if n_spill:
+                    agg_flat, _ = jax.lax.scan(
+                        spill_agg, agg_flat,
+                        (take(gbatch, n_cached, n_groups), scale_g[n_cached:],
+                         comp_keys[n_cached:]),
+                    )
+            else:
+                # obs diag: accumulate the full-participation reference
+                # s = sum_i w_i U_i alongside the sampled aggregate in the
+                # SAME scans (scale = w per group), so spill groups are
+                # recomputed once, not twice, and at sampler='full' (where
+                # plan.scale == w bitwise) the two accumulators are bitwise
+                # equal — the recorded Eq. 2 gap is exactly zero.
+                wf_g = weights.astype(jnp.float32).reshape(n_groups, g)
+                full_flat = jnp.zeros((dim,), jnp.float32)
+
+                def cached_agg_diag(accs, inp):
+                    flat, sc, wf = inp
+                    acc, full = accs
+                    _, part = update_cache.group_norm_aggregate(
+                        flat, sc, self.backend, self.interpret
+                    )
+                    _, full_part = update_cache.group_norm_aggregate(
+                        flat, wf, self.backend, self.interpret
+                    )
+                    return (acc + part, full + full_part), None
+
+                def spill_agg_diag(accs, inp):
+                    gb, sc, wf, kg = inp
+                    acc, full = accs
+                    upd, _ = jax.vmap(self._local_update, in_axes=(None, 0))(
+                        params, gb
+                    )
+                    flat = kops.tree_to_client_matrix(upd)
+                    if fl.compression == "none":
+                        mat_flats = ()
+                    else:
+                        mats = client_compression_material(upd, kg, fl)
+                        mat_flats = tuple(
+                            kops.tree_to_client_matrix(m) for m in mats
+                        )
+                    _, part = update_cache.group_compress_norm_aggregate(
+                        flat, sc, mat_flats, fl.compression,
+                        fl.compression_param, self.backend, self.interpret,
+                    )
+                    _, full_part = update_cache.group_compress_norm_aggregate(
+                        flat, wf, mat_flats, fl.compression,
+                        fl.compression_param, self.backend, self.interpret,
+                    )
+                    return (acc + part, full + full_part), None
+
+                if n_cached:
+                    (agg_flat, full_flat), _ = jax.lax.scan(
+                        cached_agg_diag, (agg_flat, full_flat),
+                        (cache, scale_g[:n_cached], wf_g[:n_cached]),
+                    )
+                if n_spill:
+                    (agg_flat, full_flat), _ = jax.lax.scan(
+                        spill_agg_diag, (agg_flat, full_flat),
+                        (take(gbatch, n_cached, n_groups), scale_g[n_cached:],
+                         wf_g[n_cached:], comp_keys[n_cached:]),
+                    )
+                gap = flat_gap_stats(agg_flat, full_flat)
             aggregate = kops.client_matrix_to_tree(
                 agg_flat, params, strip_client_axis=False
             )
 
             new_params, new_opt = self._apply_server(params, opt_state, aggregate)
-            return new_params, new_opt, self._metrics(plan, losses, trace)
+            return new_params, new_opt, self._metrics(plan, losses, trace, gap)
 
         return round_step

@@ -56,6 +56,7 @@ def run_training(
     server_opt=None,
     mode: str = "prefetch",
     rounds_per_scan: int = 8,
+    obs=None,
 ):
     """Train for ``rounds`` communication rounds; returns (params, History).
 
@@ -67,7 +68,10 @@ def run_training(
     'prefetch' | 'scan'); ``rounds_per_scan`` sizes the 'scan' blocks.  All
     modes produce identical masks and allclose parameters for the same seed,
     and all three evaluate on the same ``eval_every`` grid ('scan' aligns its
-    block boundaries to it).
+    block boundaries to it).  ``obs`` threads a
+    :class:`~repro.obs.ObsConfig`/:class:`~repro.obs.Telemetry` into the
+    driver's observability layer (phase spans, Eq. 2 gap estimator, metrics
+    endpoint — docs/observability.md); None keeps telemetry off.
     """
     from repro.sim.driver import run_simulation
 
@@ -75,7 +79,7 @@ def run_training(
         dataset, init_fn, loss_fn, fl, rounds,
         batch_size=batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
         eval_fn=eval_fn, eval_batch=eval_batch, eval_every=eval_every,
-        seed=seed, local_epoch=local_epoch, server_opt=server_opt,
+        seed=seed, local_epoch=local_epoch, server_opt=server_opt, obs=obs,
     )
     hist = History(
         loss=list(ledger.loss),

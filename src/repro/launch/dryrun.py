@@ -166,15 +166,15 @@ def run_pair(arch: str, shape_name: str, mesh, mesh_name: str, out_dir: str,
         return rec
 
     chips = mesh.devices.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         lowered = build_lowered(cfg, shape, mesh, fl_mode=fl_mode, fsdp=fsdp,
                                 out_shard=out_shard, expert_parallel=expert_parallel,
                                 kv_mode=kv_mode, scan_group=scan_group)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     cost = compiled.cost_analysis()
     if isinstance(cost, list):

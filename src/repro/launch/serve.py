@@ -1,8 +1,15 @@
 """Serving driver: batched prefill + greedy decode for any architecture
 (reduced configs run on CPU; full configs are exercised via the dry-run).
 
+Status lines go through the obs logger (``repro.obs.log.get_logger`` — the
+same ``[serve] message`` shape they always had, now filterable via the
+``REPRO_LOG`` env var), timings are on the monotonic clock
+(``time.perf_counter``), and the prefill/decode stages run inside obs spans
+so a ``--metrics-port`` endpoint exports ``repro_phase_seconds`` for both
+stages while decode is live.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b-reduced \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 --metrics-port 0
 """
 
 from __future__ import annotations
@@ -16,6 +23,9 @@ import numpy as np
 
 from repro.configs import get
 from repro.models import build_model
+from repro.obs import MetricsServer, get_logger, span
+
+log = get_logger("serve")
 
 
 def main():
@@ -24,7 +34,28 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve a live JSON/Prometheus metrics endpoint on "
+                         "this port (0 = ephemeral; repro/obs/http.py)")
     args = ap.parse_args()
+
+    server = None
+    phase_seconds = {}
+    if args.metrics_port is not None:
+        server = MetricsServer(port=args.metrics_port).start()
+        log.info("metrics endpoint at %s/metrics", server.url)
+
+    class _Sink:
+        # minimal record_span sink: fold spans into the endpoint snapshot
+        def record_span(self, name, seconds):
+            phase_seconds[name] = seconds
+            if server is not None:
+                server.update({
+                    "run": {"arch": args.arch, "mode": "serve"},
+                    "phase_seconds": dict(phase_seconds),
+                })
+
+    sink = _Sink()
 
     cfg = get(args.arch)
     model = build_model(cfg, remat=False)
@@ -46,22 +77,26 @@ def main():
     prefill = jax.jit(lambda p, bb: model.prefill(p, bb, cache_len))
     decode = jax.jit(model.decode_step)
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    print(f"[serve] prefill {b}x{s} in {time.time()-t0:.2f}s")
-    out = [tok]
-    t0 = time.time()
-    prefix = cfg.prefix_tokens or 0
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache, jnp.asarray(s + prefix + i))
+    with span("prefill", sink) as sp:
+        logits, cache = prefill(params, batch)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    dt = time.time() - t0
+        sp.block(tok)
+    log.info("prefill %dx%d in %.2fs", b, s, sp.seconds)
+    out = [tok]
+    prefix = cfg.prefix_tokens or 0
+    with span("decode", sink) as sp:
+        for i in range(args.gen - 1):
+            logits, cache = decode(params, tok, cache, jnp.asarray(s + prefix + i))
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        sp.block(tok)
+    dt = sp.seconds
     toks = np.asarray(jnp.concatenate(out, axis=1))
-    print(f"[serve] generated {args.gen-1} steps x {b} seqs in {dt:.2f}s "
-          f"({(args.gen-1)*b/max(dt,1e-9):.1f} tok/s)")
-    print("[serve] sample token ids:", toks[0][:16].tolist())
+    log.info("generated %d steps x %d seqs in %.2fs (%.1f tok/s)",
+             args.gen - 1, b, dt, (args.gen - 1) * b / max(dt, 1e-9))
+    log.info("sample token ids: %s", toks[0][:16].tolist())
+    if server is not None:
+        server.stop()
 
 
 if __name__ == "__main__":

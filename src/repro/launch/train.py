@@ -32,6 +32,14 @@ They compose with both branches — overriding a scenario cell's own
 round loop (e.g. ``--stragglers p_up=0.35,p_down=0.15,drop=0.1,over=2
 --deadline 2.0``).
 
+``--metrics-port`` / ``--diag-every`` / ``--obs-jsonl`` / ``--trace-dir``
+switch on the observability layer (repro/obs, docs/observability.md) on
+either branch: a live JSON/Prometheus endpoint, the online Eq. 2 gap
+estimator (``‖ŝ − s‖²`` vs the full-participation aggregate, single-device
+only), a schema-versioned JSONL event stream, and a
+``jax.profiler.start_trace`` window over the first ``--trace-rounds``
+rounds for TensorBoard/Perfetto.
+
 Examples (CPU container — reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
       --rounds 20 --clients 8 --expected 2 --sampler aocs
@@ -121,6 +129,29 @@ def parse_stragglers(spec: str | None, deadline: float | None):
         raise SystemExit(f"--stragglers/--deadline: {e}") from None
 
 
+def obs_from_args(args, mode: str | None = None):
+    """``--metrics-port``/``--diag-every``/... -> ObsConfig | None.
+
+    Returns None when no obs flag was passed, so both branches keep the
+    exact telemetry-off code path by default.  ``--obs-phases auto``
+    enables phased execution only where it applies (host mode).
+    """
+    if (args.metrics_port is None and args.diag_every == 0
+            and args.obs_jsonl is None and args.trace_dir is None
+            and args.obs_phases != "on"):
+        return None
+    from repro.obs import ObsConfig
+
+    phases = args.obs_phases == "on" or (
+        args.obs_phases == "auto" and mode == "host"
+    )
+    return ObsConfig(
+        diag_every=args.diag_every, metrics_port=args.metrics_port,
+        jsonl=args.obs_jsonl, trace_dir=args.trace_dir,
+        trace_rounds=args.trace_rounds, phases=phases,
+    )
+
+
 def run_scenario_cli(args):
     """The ``--scenario`` branch: one experiment-grid cell via repro.sim."""
     from repro.sim.driver import build_client_mesh, run_scenario
@@ -171,10 +202,17 @@ def run_scenario_cli(args):
     print(f"[sim] scenario {effective.name} ({sc.paper}) mode={mode}"
           f"{f' mesh={shards}' if shards else ''} "
           f"rounds={args.rounds if args.rounds is not None else effective.rounds}")
+    obs = obs_from_args(args, mode=mode)
+    if obs is not None and obs.diag_every > 0 and mesh is not None:
+        raise SystemExit(
+            "--diag-every and a mesh conflict: the obs gap estimator is "
+            "single-device only (docs/architecture.md#limits) — drop "
+            "--diag-every or pass --shard off"
+        )
     _, ledger = run_scenario(
         sc, reduced=args.reduced, mode=mode, rounds=args.rounds,
         rounds_per_scan=max(args.sim_rounds_per_scan, 1), mesh=mesh,
-        artifact=artifact,
+        artifact=artifact, obs=obs,
     )
     for k, (loss, sent) in enumerate(zip(ledger.loss, ledger.sent)):
         sys_col = ""
@@ -185,6 +223,12 @@ def run_scenario_cli(args):
         print(f"[round {k:3d}] loss {loss:.4f} alpha {ledger.alpha[k]:.3f} "
               f"sent {sent}/{ledger.fl['n_clients']} {sys_col}"
               f"up {ledger.uplink_bits[k]/1e9:.2f}G down {ledger.downlink_bits[k]/1e9:.2f}G")
+    if ledger.gap_rounds:
+        gaps = ", ".join(
+            f"r{r}={g:.3g}"
+            for r, g in zip(ledger.gap_rounds, ledger.gap_ratio)
+        )
+        print(f"[sim] Eq. 2 gap ratio on the diag grid: {gaps}")
     print(f"[sim] {ledger.rounds_per_sec:.1f} rounds/s (steady-state), "
           f"artifact {artifact}")
 
@@ -215,6 +259,26 @@ def main():
     ap.add_argument("--deadline", type=float, default=None,
                     help="round deadline in latency units (enables the "
                          "client-state layer; composes with --stragglers)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve a live JSON/Prometheus metrics endpoint on "
+                         "this port (0 = ephemeral; repro/obs/http.py)")
+    ap.add_argument("--diag-every", type=int, default=0,
+                    help="run the online Eq. 2 gap estimator every N rounds "
+                         "(0 = off; single-device only)")
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="append the schema-versioned obs event stream "
+                         "(JSONL, one event per line) to PATH")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="profile the first --trace-rounds rounds with "
+                         "jax.profiler.start_trace into DIR "
+                         "(TensorBoard/Perfetto)")
+    ap.add_argument("--trace-rounds", type=int, default=3,
+                    help="rounds covered by the --trace-dir profiler window")
+    ap.add_argument("--obs-phases", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="phased round execution for real per-phase spans "
+                         "(auto: on whenever any obs flag is set; host-mode "
+                         "vmap engines only — see docs/observability.md)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--expected", type=int, default=2)
     ap.add_argument("--sampler", default=None,
@@ -299,7 +363,36 @@ def main():
     print(f"[train] {cfg.name}: {dim/1e6:.1f}M params, n={fl.n_clients} m={fl.expected_clients} "
           f"sampler={fl.sampler} engine={'shard_map/' + str(n_dev) if shard else fl.round_engine} "
           f"agg={fl.agg_backend}")
-    step = jax.jit(make_engine(model.loss, fl, mesh=mesh))
+    # obs layer: the arch loop is synchronous (a host loop), so phase spans
+    # and the gap estimator apply exactly as in the sim driver's host mode.
+    obs = obs_from_args(args, mode="host")
+    tel = None
+    if obs is not None:
+        from repro.obs import Telemetry
+
+        tel = Telemetry(obs)
+    diag_on = tel is not None and tel.cfg.diag_every > 0
+    if diag_on and mesh is not None:
+        raise SystemExit(
+            "--diag-every and a mesh conflict: the obs gap estimator is "
+            "single-device only (docs/architecture.md#limits) — drop "
+            "--diag-every or pass --shard off"
+        )
+    phased_step = step_diag = None
+    if mesh is None:
+        from repro.fl.engine import RoundEngine
+
+        eng = RoundEngine(model.loss, fl)
+        if tel is not None and tel.cfg.phases and eng.memory == "vmap":
+            from repro.obs.phased import make_phased_step
+
+            phased_step = make_phased_step(eng, tel)
+        else:
+            step = jax.jit(eng.make_step())
+            if diag_on:
+                step_diag = jax.jit(eng.make_step(True))
+    else:
+        step = jax.jit(make_engine(model.loss, fl, mesh=mesh))
     w = client_weights(fl)
     rng = np.random.default_rng(0)
     total_bits = 0
@@ -308,17 +401,30 @@ def main():
     from repro.core.sampling import init_sampler_state, is_stateful
 
     samp = init_sampler_state() if is_stateful(fl.sampler) else None
+    if tel is not None:
+        tel.run_start(arch=cfg.name, mode="train", sampler=fl.sampler,
+                      n_clients=fl.n_clients, rounds=args.rounds,
+                      backend=jax.default_backend())
     for k in range(args.rounds):
+        if tel is not None:
+            tel.round_start(k)
         batch = synthetic_token_batch(rng, cfg, fl.n_clients, fl.local_steps,
                                       args.batch, args.seq)
-        t0 = time.time()
+        t0 = time.perf_counter()
         kk = jax.random.fold_in(key, k)
+        diag = diag_on and tel.want_gap(k)
         sys_col = ""
         if state is not None:
             state, trace = state_step(state, kk, jnp.arange(fl.n_clients))
         else:
             trace = None
-        params, _, m = step(params, (), batch, w, kk, trace, samp)
+        if phased_step is not None:
+            params, _, m = phased_step(params, (), batch, w, kk, trace, samp,
+                                       diag=diag)
+        else:
+            params, _, m = (step_diag if diag else step)(
+                params, (), batch, w, kk, trace, samp
+            )
         if samp is not None:
             samp = m.sampler_state
         if state is not None:
@@ -326,9 +432,20 @@ def main():
                        f"miss {int(m.deadline_misses)} drop {int(m.dropouts)} ")
         loss = float(m.loss)
         total_bits += round_bits(fl, dim, m.mask)
+        wall_s = time.perf_counter() - t0
+        if diag:
+            tel.record_gap(k, float(m.gap.gap_sq), float(m.gap.full_sq))
+        if tel is not None:
+            tel.record_round(
+                k, loss=loss, sent_clients=int(m.sent_clients),
+                wall_ms=wall_s * 1e3, uplink_bits_total=int(total_bits),
+            )
         print(f"[round {k:3d}] loss {loss:.4f} alpha {float(m.alpha):.3f} "
               f"gamma {float(m.gamma):.3f} sent {int(m.sent_clients)}/{fl.n_clients} "
-              f"{sys_col}bits {total_bits/1e9:.2f}G ({time.time()-t0:.1f}s)")
+              f"{sys_col}bits {total_bits/1e9:.2f}G ({wall_s:.1f}s)")
+    if tel is not None:
+        tel.finish(rounds=args.rounds)
+        tel.close()
     if args.checkpoint:
         save(args.checkpoint, params, step=args.rounds)
         print(f"[train] checkpoint saved to {args.checkpoint}")

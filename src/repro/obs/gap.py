@@ -1,0 +1,80 @@
+"""Online Eq. 2 gap estimator: ``‖ŝ − s‖²`` between the sampled aggregate
+and the full-participation aggregate, observed empirically per round.
+
+The paper's entire objective (Eq. 2) is to pick inclusion probabilities
+minimising the expected squared distance between the limited aggregate
+``ŝ = sum_i mask_i (w_i / p_i) U_i`` and the full-participation update
+``s = sum_i w_i U_i``.  This module measures that distance *online*: every
+``diag_every`` rounds the engine computes ``s`` alongside ``ŝ`` — through
+the SAME backend code path (jnp tree contraction, fused pallas kernel, or
+the scan engine's cache/spill stream), just with ``scale = w`` instead of
+the plan's ``scale`` — and records :class:`GapStats`.  Running both sides
+through one code path is what makes the ``sampler='full'`` sanity invariant
+exact: at full participation ``scale == w`` bitwise, so the gap is
+identically zero (gated by tests/test_obs.py), and Ribero–Vikalo-style
+threshold tuning (arXiv 2007.15197) gets a clean norm signal to anneal on.
+
+With compression active the reference ``s`` is the full-participation
+aggregate of the *transmitted* updates ``sum_i w_i C(U_i)`` — the quantity
+the estimator is actually unbiased for — so the recorded gap isolates the
+sampling-induced error from the (orthogonal) compression error.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+class GapStats(NamedTuple):
+    """One diagnostic round's Eq. 2 observables (device scalars, f32).
+
+    ``gap_sq`` is ``‖ŝ − s‖²`` (the realized Eq. 2 objective), ``full_sq``
+    is ``‖s‖²`` (the scale reference); their ratio — computed host-side via
+    :func:`gap_ratio` — is the dimensionless series the metrics endpoint
+    exports as ``repro_gap_ratio``.
+    """
+
+    gap_sq: jax.Array   # ‖ŝ − s‖² — the realized Eq. 2 distance
+    full_sq: jax.Array  # ‖s‖²     — full-participation reference magnitude
+
+
+def flat_gap_stats(sampled: jax.Array, full: jax.Array) -> GapStats:
+    """:class:`GapStats` from two flat ``(D,)`` aggregate vectors (f32 math)."""
+    a = sampled.astype(jnp.float32)
+    b = full.astype(jnp.float32)
+    d = a - b
+    return GapStats(gap_sq=jnp.sum(d * d), full_sq=jnp.sum(b * b))
+
+
+def tree_gap_stats(sampled, full) -> GapStats:
+    """:class:`GapStats` from two aggregate pytrees of identical structure.
+
+    Leaf-wise ``‖ŝ − s‖²`` and ``‖s‖²`` accumulated in f32 (same reduction
+    pattern as ``ocs.client_norms``: per-leaf sums, no flatten/concat copy).
+    """
+    gap_sq = jnp.zeros((), jnp.float32)
+    full_sq = jnp.zeros((), jnp.float32)
+    for a, b in zip(jax.tree_util.tree_leaves(sampled),
+                    jax.tree_util.tree_leaves(full)):
+        a32 = a.astype(jnp.float32)
+        b32 = b.astype(jnp.float32)
+        d = a32 - b32
+        gap_sq = gap_sq + jnp.sum(d * d)
+        full_sq = full_sq + jnp.sum(b32 * b32)
+    return GapStats(gap_sq=gap_sq, full_sq=full_sq)
+
+
+def gap_ratio(gap_sq: float, full_sq: float) -> float:
+    """Host-side dimensionless gap: ``‖ŝ−s‖² / ‖s‖²`` (0 when ``s`` is 0).
+
+    The guarded division lives here (not in the jitted stats) so the ledger
+    and endpoint always carry a finite ratio even on a degenerate round
+    where the full update vanished.
+    """
+    return float(gap_sq) / max(float(full_sq), _EPS) if float(full_sq) > 0.0 \
+        else 0.0

@@ -1,0 +1,100 @@
+"""Phased round executor: per-phase jits so spans measure real device work.
+
+The monolithic ``RoundEngine.make_step`` is one jitted graph — XLA fuses
+across phase boundaries, so a span around any slice of it would time the
+whole dispatch.  :func:`make_phased_step` instead jits each of the engine's
+five :class:`~repro.fl.engine.VmapPhases` callables separately and wraps
+each call in :func:`repro.obs.span` with the phase's outputs as the block
+target, so the recorded wall times are genuine ``block_until_ready``-bounded
+per-phase measurements (and each phase shows as its own
+``repro.obs/<phase>`` slice in a ``--trace-dir`` profile).
+
+Cost of the honesty: five dispatches per round instead of one, and XLA
+cannot fuse across the phase boundaries — the phased step is strictly
+slower than the fused one.  Semantics: the phases issue the identical ops
+in the identical order, so sampling masks are bitwise equal to the fused
+step's; parameters agree only to float tolerance because the fusion domains
+(hence some reduction orders) differ.  That is why ``ObsConfig.phases``
+defaults to False and the bit-exactness gates all run with it off.
+
+vmap-memory engines only (the scan engine's group stream has no five-phase
+cut; its driver records block-granularity spans instead).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs.gap import tree_gap_stats
+from repro.obs.trace import span
+
+
+def make_phased_step(engine, telemetry=None):
+    """Five separately-jitted phases composed into one ``round_step``.
+
+    Same signature as ``engine.make_step()`` plus a trailing ``diag`` flag:
+    ``phased_step(params, opt_state, batch, weights, key, trace=None,
+    sampler_state=None, diag=False)``.  ``telemetry`` (anything with
+    ``record_span``; usually :class:`~repro.obs.telemetry.Telemetry`)
+    receives each phase's seconds; ``diag=True`` folds the Eq. 2 gap
+    reference into the aggregate phase, exactly like ``make_step(diag=True)``.
+    """
+    if engine.memory != "vmap":
+        raise ValueError(
+            "phased execution needs a vmap-memory engine; the scan engine "
+            f"(memory={engine.memory!r}) is timed at block granularity by "
+            "the sim driver instead"
+        )
+    ph = engine.vmap_phases()
+    compression = engine.fl.compression
+
+    j_local = jax.jit(ph.local_update)
+    j_compress = jax.jit(ph.compress) if compression != "none" else None
+    j_sample = jax.jit(ph.sample)
+    j_agg = jax.jit(ph.aggregate)
+    j_server = jax.jit(ph.server_opt)
+
+    def agg_diag(params, updates, sendables, mats, scale, weights):
+        aggregate = ph.aggregate(params, updates, sendables, mats, scale)
+        full = ph.aggregate(params, updates, sendables, mats,
+                            weights.astype(jnp.float32))
+        return aggregate, tree_gap_stats(aggregate, full)
+
+    j_agg_diag = jax.jit(agg_diag)
+
+    def phased_step(params, opt_state, batch, weights, key, trace=None,
+                    sampler_state=None, diag=False):
+        # eager split is bitwise-identical to the traced one (threefry is a
+        # pure function of the key bits), so round keys stay in contract.
+        k_sample, k_comp = jax.random.split(key)
+        with span("local_update", telemetry) as sp:
+            updates, losses = j_local(params, batch)
+            sp.block((updates, losses))
+        with span("compress", telemetry) as sp:
+            # a 'none' compressor still records its (~0s) span so the
+            # endpoint always exports all five phases.
+            if j_compress is None:
+                sendables, mats = updates, ()
+            else:
+                sendables, mats = j_compress(updates, k_comp)
+                sp.block(sendables)
+        with span("sample", telemetry) as sp:
+            plan = j_sample(sendables, weights, k_sample, trace,
+                            sampler_state)
+            sp.block(plan.scale)
+        gap = None
+        with span("aggregate", telemetry) as sp:
+            if diag:
+                aggregate, gap = j_agg_diag(params, updates, sendables, mats,
+                                            plan.scale, weights)
+            else:
+                aggregate = j_agg(params, updates, sendables, mats,
+                                  plan.scale)
+            sp.block(aggregate)
+        with span("server_opt", telemetry) as sp:
+            new_params, new_opt = j_server(params, opt_state, aggregate)
+            sp.block(new_params)
+        return new_params, new_opt, engine._metrics(plan, losses, trace, gap)
+
+    return phased_step

@@ -48,16 +48,32 @@ what they were before the layer existed.
 Every run fills a :class:`SimLedger` — per-round loss / alpha / gamma / sent
 / expected clients, the system-layer counters (selected-before-attrition
 ``over_selected``, ``deadline_misses``, ``dropouts`` — all zero without a
-``system``) plus cumulative **uplink and downlink** bits
-(``fl.round.round_bits_duplex``; downlink is reported separately because the
-paper's x-axis excludes broadcast, footnote 5) — serialised as a schema-2
-JSON artifact (``validate_ledger`` is the contract both the tests and the
-``bench_sim --smoke`` CI gate assert; schema 1 lacked the system-layer
-series).
+``system``), per-round ``wall_ms`` on the monotonic clock, plus cumulative
+**uplink and downlink** bits (``fl.round.round_bits_duplex``; downlink is
+reported separately because the paper's x-axis excludes broadcast,
+footnote 5) — serialised as a schema-3 JSON artifact (``validate_ledger`` is
+the contract both the tests and the ``bench_sim --smoke`` CI gate assert;
+schema 1 lacked the system-layer series, schema 2 lacked ``wall_ms`` and the
+gap series).
+
+An ``obs`` argument (:class:`repro.obs.ObsConfig`, or a live
+:class:`repro.obs.Telemetry` when the caller wants the endpoint to outlive
+the run) switches on the observability layer: phase/round spans, the online
+Eq. 2 gap estimator (``make_step(diag=True)`` every ``diag_every`` rounds —
+the sparse ``gap_*`` ledger series and the endpoint's ``repro_gap_ratio``),
+the JSONL event stream and the live metrics endpoint.  Telemetry changes NO
+round mathematics — masks, norms and params are bitwise what they are with
+``obs=None`` (gated in tests/test_obs.py) — but it does change *scheduling*:
+the prefetch loop gains a per-round device sync so wall times are honest
+(the observer effect; docs/observability.md).  The gap estimator is
+single-device only (rejected with a mesh); ``ObsConfig.phases`` applies to
+host-mode vmap engines and is ignored elsewhere (scan rounds are timed at
+block granularity).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -71,6 +87,9 @@ import numpy as np
 from repro.core.sampling import init_sampler_state, is_stateful
 from repro.fl.engine import RoundEngine, make_engine
 from repro.fl.round import client_weights, round_bits_duplex
+from repro.obs.gap import gap_ratio as _obs_gap_ratio
+from repro.obs.telemetry import as_telemetry
+from repro.obs.trace import span as obs_span
 from repro.sim.pool import (
     ClientPool,
     gather_batch,
@@ -94,28 +113,46 @@ def build_client_mesh(fl, devices: int | None = None):
     shards = max(d for d in range(1, n_dev + 1) if fl.n_clients % d == 0)
     return jax.make_mesh((shards,), (fl.client_axis,))
 
-SIM_SCHEMA = 2
+SIM_SCHEMA = 3
 MODES = ("host", "prefetch", "scan")
 
-# per-round series every schema-2 ledger must carry, all the same length
-# (schema 1 lacked the three system-layer counters)
+# per-round series every schema-3 ledger must carry, all the same length
+# (schema 1 lacked the three system-layer counters; schema 2 lacked wall_ms)
 LEDGER_SERIES = (
     "loss", "alpha", "gamma", "sent", "expected_clients",
     "over_selected", "deadline_misses", "dropouts",
-    "uplink_bits", "downlink_bits",
+    "uplink_bits", "downlink_bits", "wall_ms",
 )
+
+# sparse per-diagnostic-round series (schema 3; empty when the run had no
+# obs gap estimator) — all four the same length, indexed by gap_rounds
+GAP_SERIES = ("gap_rounds", "gap_sq", "gap_full_sq", "gap_ratio")
+
+
+class _NullSpan:
+    """No-op stand-in for :class:`repro.obs.trace.Span` when telemetry is off."""
+
+    def block(self, arrays) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
 
 
 @dataclass
 class SimLedger:
-    """Structured metrics ledger of one simulation run (artifact schema 2).
+    """Structured metrics ledger of one simulation run (artifact schema 3).
 
     Per-round series (``LEDGER_SERIES``, including the system-layer counters
     ``over_selected``/``deadline_misses``/``dropouts`` — zeros when the run
-    had no :class:`~repro.sim.pool.SystemConfig`) plus the eval curve
-    (``acc_rounds``/``acc``, rectangular — no ``(round, value)`` tuples) and
-    the run's throughput.  ``masks``/``norms`` are kept in memory for parity
-    tests and are written to JSON only on request (``include_masks``).
+    had no :class:`~repro.sim.pool.SystemConfig` — and per-round ``wall_ms``
+    on the monotonic clock: honest per-round syncs in host mode, dispatch
+    cadence in prefetch, block-amortized in scan), the sparse gap series
+    (``GAP_SERIES`` — the obs layer's Eq. 2 estimator on the ``diag_every``
+    grid, empty without it), the eval curve (``acc_rounds``/``acc``,
+    rectangular — no ``(round, value)`` tuples) and the run's throughput.
+    ``masks``/``norms`` are kept in memory for parity tests and are written
+    to JSON only on request (``include_masks``).
     """
 
     mode: str
@@ -132,6 +169,11 @@ class SimLedger:
     dropouts: list = field(default_factory=list)
     uplink_bits: list = field(default_factory=list)      # cumulative
     downlink_bits: list = field(default_factory=list)    # cumulative
+    wall_ms: list = field(default_factory=list)          # per-round, monotonic clock
+    gap_rounds: list = field(default_factory=list)       # diag_every grid
+    gap_sq: list = field(default_factory=list)           # ‖ŝ − s‖² per diag round
+    gap_full_sq: list = field(default_factory=list)      # ‖s‖² per diag round
+    gap_ratio: list = field(default_factory=list)        # gap_sq / full_sq
     acc_rounds: list = field(default_factory=list)
     acc: list = field(default_factory=list)
     masks: list = field(default_factory=list)            # (n,) bool per round
@@ -140,7 +182,7 @@ class SimLedger:
     rounds_per_sec: float = 0.0                          # steady-state (post-compile)
 
     def to_json(self, include_masks: bool = False) -> dict:
-        """The schema-2 artifact document (see :func:`validate_ledger`)."""
+        """The schema-3 artifact document (see :func:`validate_ledger`)."""
         doc = {
             "schema": SIM_SCHEMA,
             "scenario": self.scenario,
@@ -158,6 +200,11 @@ class SimLedger:
                 "dropouts": self.dropouts,
                 "uplink_bits": self.uplink_bits,
                 "downlink_bits": self.downlink_bits,
+                "wall_ms": self.wall_ms,
+                "gap_rounds": self.gap_rounds,
+                "gap_sq": self.gap_sq,
+                "gap_full_sq": self.gap_full_sq,
+                "gap_ratio": self.gap_ratio,
                 "acc_rounds": self.acc_rounds,
                 "acc": self.acc,
             },
@@ -177,14 +224,17 @@ class SimLedger:
 
 
 def validate_ledger(doc: dict) -> None:
-    """Assert the schema-2 ledger contract; raises ``ValueError`` on breach.
+    """Assert the schema-3 ledger contract; raises ``ValueError`` on breach.
 
     The single source of truth for what a sim artifact must contain — the
     scenario-grid smoke test and the ``bench_sim --smoke`` CI step both call
-    this, so the schema cannot drift silently.  Schema 2 adds the per-round
+    this, so the schema cannot drift silently.  Schema 2 added the per-round
     system-layer counters (``over_selected``, ``deadline_misses``,
     ``dropouts``), length-checked with every other series and required to be
-    non-negative.
+    non-negative; schema 3 adds per-round ``wall_ms`` (finite, non-negative,
+    monotonic-clock measured) and the sparse obs gap series (``GAP_SERIES``
+    — rectangular across the four, finite, non-negative, empty when the run
+    had no gap estimator).
     """
     if doc.get("schema") != SIM_SCHEMA:
         raise ValueError(f"ledger schema {doc.get('schema')!r} != {SIM_SCHEMA}")
@@ -207,14 +257,32 @@ def validate_ledger(doc: dict) -> None:
             )
     if not n:
         raise ValueError("ledger records zero rounds")
-    for series in ("loss", "alpha", "gamma"):
+    for series in ("loss", "alpha", "gamma", "wall_ms"):
         if not np.all(np.isfinite(np.asarray(metrics[series], np.float64))):
             raise ValueError(f"non-finite values in ledger series {series!r}")
+    if np.any(np.asarray(metrics["wall_ms"], np.float64) < 0):
+        raise ValueError("negative wall_ms in ledger")
     for series in ("acc_rounds", "acc"):
         if not isinstance(metrics.get(series), list):
             raise ValueError(f"ledger metrics lack the {series!r} series")
     if len(metrics["acc_rounds"]) != len(metrics["acc"]):
         raise ValueError("acc_rounds and acc series lengths differ")
+    m_gap = None
+    for series in GAP_SERIES:
+        vals = metrics.get(series)
+        if not isinstance(vals, list):
+            raise ValueError(f"ledger metrics lack the {series!r} series")
+        if m_gap is None:
+            m_gap = len(vals)
+        if len(vals) != m_gap:
+            raise ValueError(
+                f"ragged gap series: {series!r} has {len(vals)}, want {m_gap}"
+            )
+        arr = np.asarray(vals, np.float64)
+        if not np.all(np.isfinite(arr)):
+            raise ValueError(f"non-finite values in gap series {series!r}")
+        if np.any(arr < 0):
+            raise ValueError(f"negative values in gap series {series!r}")
     for series in ("over_selected", "deadline_misses", "dropouts"):
         if np.any(np.asarray(metrics[series], np.int64) < 0):
             raise ValueError(f"negative counts in ledger series {series!r}")
@@ -245,6 +313,7 @@ def run_simulation(
     system=None,
     scenario_name: str | None = None,
     artifact: str | None = None,
+    obs=None,
 ) -> tuple:
     """Run ``rounds`` communication rounds; returns ``(params, SimLedger)``.
 
@@ -260,10 +329,23 @@ def run_simulation(
     ``system`` (a :class:`~repro.sim.pool.SystemConfig`) switches on the
     client-state layer (module docstring): mutually exclusive with the
     scalar ``fl.availability < 1`` path, since the trace generalizes it.
-    ``artifact`` (a path) serialises the ledger on completion.
+    ``artifact`` (a path) serialises the ledger on completion.  ``obs``
+    (an :class:`~repro.obs.ObsConfig`, or a live
+    :class:`~repro.obs.Telemetry` whose lifecycle the caller keeps) switches
+    on the observability layer — module docstring and docs/observability.md;
+    the gap estimator needs a single-device run (``diag_every`` with a
+    ``mesh`` is rejected: the shard_map round has no diag variant).
     """
     if mode not in MODES:
         raise ValueError(f"unknown sim mode {mode!r}; want one of {MODES}")
+    tel, tel_owned = as_telemetry(obs)
+    diag_on = tel is not None and tel.cfg.diag_every > 0
+    if diag_on and mesh is not None:
+        raise ValueError(
+            "the obs gap estimator (ObsConfig.diag_every > 0) does not "
+            "support a mesh: the shard_map round has no diag variant — run "
+            "single-device, or drop diag_every (docs/architecture.md#limits)"
+        )
     if system is not None and fl.availability < 1.0:
         raise ValueError(
             "system config and scalar fl.availability < 1 are mutually "
@@ -291,11 +373,27 @@ def run_simulation(
     # mesh, host/prefetch run the explicit-collective shard_map round; a
     # rejected config (unknown compressor/backend, server_opt on the mesh)
     # raises here — no key is consumed and no pool is uploaded.
+    engine = None
     if mesh is not None:
         round_step_fn = make_engine(loss_fn, fl, server_opt, mesh=mesh)
-        step_factory = lambda: round_step_fn
+        step_factory = lambda diag=False: round_step_fn
     else:
-        step_factory = RoundEngine(loss_fn, fl, server_opt).make_step
+        engine = RoundEngine(loss_fn, fl, server_opt)
+        step_factory = engine.make_step
+    # phased execution (real per-phase spans) applies to host-mode vmap
+    # engines only; elsewhere the knob is ignored and rounds are timed as
+    # whole "round" spans (scan: one span per block).
+    use_phased = (
+        tel is not None and tel.cfg.phases and mode == "host"
+        and engine is not None and engine.memory == "vmap"
+    )
+
+    def sp(name):
+        # span when telemetry is on; inert no-op context otherwise, so the
+        # obs=None path stays exactly the pre-obs code.
+        if tel is not None:
+            return obs_span(name, tel)
+        return contextlib.nullcontext(_NULL_SPAN)
 
     rng = np.random.default_rng(seed)
     key = jax.random.PRNGKey(seed)
@@ -336,26 +434,81 @@ def run_simulation(
 
     dev_metrics = []          # device-side RoundMetrics (stacked blocks in scan)
     dev_evals = []            # (round, device scalar)
+    wall_ms = []              # per-round wall (monotonic clock; see SimLedger)
+    gap_records = []          # (round, gap_sq, full_sq) on the diag_every grid
+    tel_up = tel_down = tel_miss = tel_drop = 0   # live endpoint counters
     t_first, first_units = None, 0
-    t_start = time.time()
+
+    def tel_round(k, metrics, ms_val):
+        # per-round endpoint/event record (telemetry on only).  The mask
+        # pull syncs the device — part of the documented observer effect.
+        nonlocal tel_up, tel_down, tel_miss, tel_drop
+        up, down = round_bits_duplex(fl, dim, np.asarray(metrics.mask))
+        tel_up += int(up)
+        tel_down += int(down)
+        tel_miss += int(metrics.deadline_misses)
+        tel_drop += int(metrics.dropouts)
+        tel.record_round(
+            k, loss=float(metrics.loss), sent_clients=int(metrics.sent_clients),
+            wall_ms=ms_val, uplink_bits_total=tel_up,
+            downlink_bits_total=tel_down, deadline_misses_total=tel_miss,
+            dropouts_total=tel_drop,
+        )
+
+    def tel_gap(k, gap):
+        gs, fs = float(gap.gap_sq), float(gap.full_sq)
+        gap_records.append((k, gs, fs))
+        if tel is not None:
+            tel.record_gap(k, gs, fs)
+
+    if tel is not None:
+        tel.run_start(
+            scenario=scenario_name, mode=mode, sampler=fl.sampler,
+            n_clients=fl.n_clients, rounds=rounds,
+            backend=jax.default_backend(),
+        )
+    t_start = time.perf_counter()
 
     if mode == "host":
-        round_step = jax.jit(step_factory(), donate_argnums=(0, 1))
+        if use_phased:
+            from repro.obs.phased import make_phased_step
+
+            phased_step = make_phased_step(engine, tel)
+        else:
+            round_step = jax.jit(step_factory(), donate_argnums=(0, 1))
+            if diag_on:
+                round_step_diag = jax.jit(
+                    step_factory(True), donate_argnums=(0, 1)
+                )
         for k in range(rounds):
-            clients = draw_cohort()
-            w = cohort_weights(clients)
-            batch = dataset.sample_round_batches(
-                rng, clients, fl.local_steps, batch_size, local_epoch
-            )
-            batch = {bk: jnp.asarray(v) for bk, v in batch.items()}
+            t_round = time.perf_counter()
+            diag = diag_on and tel.want_gap(k)
+            if tel is not None:
+                tel.round_start(k)
+            with sp("data") as s:
+                clients = draw_cohort()
+                w = cohort_weights(clients)
+                batch = dataset.sample_round_batches(
+                    rng, clients, fl.local_steps, batch_size, local_epoch
+                )
+                batch = {bk: jnp.asarray(v) for bk, v in batch.items()}
+                s.block(batch)
             kk = jax.random.fold_in(key, 1000 + k)
             if state is not None:
                 state, trace = state_step(state, kk, jnp.asarray(clients))
             else:
                 trace = None
-            params, opt_state, metrics = round_step(
-                params, opt_state, batch, w, kk, trace, samp
-            )
+            if use_phased:
+                params, opt_state, metrics = phased_step(
+                    params, opt_state, batch, w, kk, trace, samp, diag=diag
+                )
+            else:
+                step = round_step_diag if diag else round_step
+                with sp("round") as s:
+                    params, opt_state, metrics = step(
+                        params, opt_state, batch, w, kk, trace, samp
+                    )
+                    s.block(metrics.loss)
             if samp is not None:
                 samp = metrics.sampler_state
             dev_metrics.append(metrics)
@@ -365,11 +518,18 @@ def run_simulation(
             # it blocks before assembling the next round's batch.
             jax.block_until_ready(metrics.loss)
             if t_first is None:
-                t_first, first_units = time.time(), 1
+                t_first, first_units = time.perf_counter(), 1
+            wall_ms.append((time.perf_counter() - t_round) * 1e3)
+            if diag:
+                tel_gap(k, metrics.gap)
+            if tel is not None:
+                tel_round(k, metrics, wall_ms[-1])
 
     elif mode == "prefetch":
         cpool = ClientPool(dataset, mesh=mesh, client_axis=fl.client_axis)
         round_step = jax.jit(step_factory(), donate_argnums=(0, 1))
+        if diag_on:
+            round_step_diag = jax.jit(step_factory(True), donate_argnums=(0, 1))
 
         def draw_round(k):
             # called strictly in round order, so the client-state chain
@@ -387,29 +547,51 @@ def run_simulation(
         cur = draw_round(0)
         cur_batch = cpool.gather(cur[0])
         for k in range(rounds):
+            t_round = time.perf_counter()
+            diag = diag_on and tel.want_gap(k)
+            if tel is not None:
+                tel.round_start(k)
             plan, w, kk, trace = cur
             batch = cur_batch
             if k + 1 < rounds:
                 # double buffering: round k+1's plan is drawn and its gather
                 # dispatched while round k's step is still executing.
-                cur = draw_round(k + 1)
-                cur_batch = cpool.gather(cur[0])
-            params, opt_state, metrics = round_step(
-                params, opt_state, batch, w, kk, trace, samp
-            )
+                with sp("data") as s:
+                    cur = draw_round(k + 1)
+                    cur_batch = cpool.gather(cur[0])
+            with sp("round") as s:
+                params, opt_state, metrics = (
+                    round_step_diag if diag else round_step
+                )(params, opt_state, batch, w, kk, trace, samp)
+                s.block(metrics.loss)
             if samp is not None:
                 samp = metrics.sampler_state
             dev_metrics.append(metrics)
             if want_eval(k):
                 dev_evals.append((k, eval_fn(params, eval_batch)))
-            if t_first is None:
-                # the only mid-run sync: marks the end of the compile round
+            if tel is not None:
+                # OBSERVER EFFECT: telemetry forces a per-round sync so
+                # wall_ms bounds device work — the double-buffered pipeline
+                # stalls here.  Telemetry off keeps the async cadence below.
                 jax.block_until_ready(metrics.loss)
-                t_first, first_units = time.time(), 1
+            if t_first is None:
+                # the only telemetry-off mid-run sync: marks the end of the
+                # compile round
+                jax.block_until_ready(metrics.loss)
+                t_first, first_units = time.perf_counter(), 1
+            # telemetry off, this is dispatch cadence, not device time
+            wall_ms.append((time.perf_counter() - t_round) * 1e3)
+            if diag:
+                tel_gap(k, metrics.gap)
+            if tel is not None:
+                tel_round(k, metrics, wall_ms[-1])
 
     else:  # scan-over-rounds
         cpool = ClientPool(dataset)
-        step_fn = step_factory()
+        # with the gap estimator on, the WHOLE block compiles with the diag
+        # step (per-round step selection cannot live inside lax.scan); the
+        # ledger still records gaps on the diag_every grid only.
+        step_fn = step_factory(diag_on)
         use_state = state is not None
         if not use_state:
             state = ()  # empty carry slot; scanned next to (params, opt_state)
@@ -446,6 +628,9 @@ def run_simulation(
         chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4))
         done = 0
         while done < rounds:
+            t_blk = time.perf_counter()
+            if tel is not None:
+                tel.round_start(done)
             span = min(rounds_per_scan, rounds - done)
             if eval_fn is not None:
                 # keep the eval_every grid: the next eval round must END a
@@ -456,32 +641,48 @@ def run_simulation(
                 while not want_eval(nxt):
                     nxt += 1
                 span = min(span, nxt - done + 1)
-            plans, w_s, keys_s = [], [], []
-            for k in range(done, done + span):
-                clients = draw_cohort()
-                plans.append(
-                    cpool.plan(rng, clients, fl.local_steps, batch_size, local_epoch)
+            with sp("data") as s:
+                plans, w_s, keys_s = [], [], []
+                for k in range(done, done + span):
+                    clients = draw_cohort()
+                    plans.append(
+                        cpool.plan(rng, clients, fl.local_steps, batch_size, local_epoch)
+                    )
+                    w_s.append(cohort_weights(clients))
+                    keys_s.append(jax.random.fold_in(key, 1000 + k))
+                clients_s, take_s, smask_s = stack_plans(plans)
+            with sp("round") as s:
+                params, opt_state, state, samp, ms = chunk(
+                    cpool.buffers, params, opt_state, state, samp,
+                    jnp.asarray(clients_s), jnp.asarray(take_s), jnp.asarray(smask_s),
+                    jnp.stack(w_s), jnp.stack(keys_s),
                 )
-                w_s.append(cohort_weights(clients))
-                keys_s.append(jax.random.fold_in(key, 1000 + k))
-            clients_s, take_s, smask_s = stack_plans(plans)
-            params, opt_state, state, samp, ms = chunk(
-                cpool.buffers, params, opt_state, state, samp,
-                jnp.asarray(clients_s), jnp.asarray(take_s), jnp.asarray(smask_s),
-                jnp.stack(w_s), jnp.stack(keys_s),
-            )
+                s.block(ms.loss)
             dev_metrics.append(ms)
             done += span
             if want_eval(done - 1):
                 dev_evals.append((done - 1, eval_fn(params, eval_batch)))
             if t_first is None:
                 jax.block_until_ready(ms.loss)
-                t_first, first_units = time.time(), span
+                t_first, first_units = time.perf_counter(), span
+            # telemetry on, s.block already synced the block, so this is an
+            # honest per-round amortisation; telemetry off it is the block's
+            # dispatch cadence (module docstring).
+            blk_ms = (time.perf_counter() - t_blk) * 1e3 / span
+            wall_ms.extend([blk_ms] * span)
+            if tel is not None or diag_on:
+                for i in range(span):
+                    kg = done - span + i
+                    row = jax.tree_util.tree_map(lambda x, i=i: x[i], ms)
+                    if diag_on and tel.want_gap(kg):
+                        tel_gap(kg, row.gap)
+                    if tel is not None:
+                        tel_round(kg, row, blk_ms)
 
     jax.block_until_ready(params)
     if dev_metrics:
         jax.block_until_ready(dev_metrics[-1].loss)
-    t_end = time.time()
+    t_end = time.perf_counter()
 
     def rows(name):
         vals = [np.asarray(getattr(m, name)) for m in dev_metrics]
@@ -531,8 +732,14 @@ def run_simulation(
         ledger.dropouts.append(int(drops[k]))
         ledger.uplink_bits.append(up_total)
         ledger.downlink_bits.append(down_total)
+        ledger.wall_ms.append(float(wall_ms[k]))
         ledger.masks.append(masks[k].astype(bool))
         ledger.norms.append(norms[k].astype(np.float32))
+    for k, gs, fs in gap_records:
+        ledger.gap_rounds.append(int(k))
+        ledger.gap_sq.append(gs)
+        ledger.gap_full_sq.append(fs)
+        ledger.gap_ratio.append(_obs_gap_ratio(gs, fs))
     for k, v in dev_evals:
         ledger.acc_rounds.append(int(k))
         ledger.acc.append(float(v))
@@ -542,6 +749,11 @@ def run_simulation(
         ledger.rounds_per_sec = steady / (t_end - t_first)
     else:
         ledger.rounds_per_sec = rounds / max(t_end - t_start, 1e-9)
+    if tel is not None:
+        tel.finish(rounds=rounds, wall_s=ledger.wall_s,
+                   rounds_per_sec=ledger.rounds_per_sec)
+        if tel_owned:
+            tel.close()
     if artifact:
         ledger.write(artifact)
     return params, ledger
@@ -557,6 +769,7 @@ def run_scenario(
     seed: int | None = None,
     mesh=None,
     artifact: str | None = None,
+    obs=None,
 ) -> tuple:
     """Run a registered scenario (by name or instance) end to end.
 
@@ -567,6 +780,8 @@ def run_scenario(
     is passed, :func:`build_client_mesh` spans the local devices.
     ``Scenario.system`` cells thread their
     :class:`~repro.sim.pool.SystemConfig` into the client-state layer.
+    ``obs`` threads an :class:`~repro.obs.ObsConfig`/
+    :class:`~repro.obs.Telemetry` into the observability layer.
     Returns ``(params, SimLedger)``.
     """
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
@@ -586,5 +801,5 @@ def run_scenario(
         ds, init_fn, loss_fn, sc.fl, rounds if rounds is not None else sc.rounds,
         batch_size=sc.batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
         seed=sc.seed if seed is None else seed, mesh=mesh, system=sc.system,
-        scenario_name=sc.name, artifact=artifact,
+        scenario_name=sc.name, artifact=artifact, obs=obs,
     )

@@ -1,7 +1,7 @@
 """repro.sim subsystem: pool-gather bitwise parity with host batch assembly,
 driver-vs-legacy-loop mask parity across all execution modes (the acceptance
 gate of the trainer refactor), cohort-size validation, the data_size weights
-regression, the scenario-grid smoke, the schema-2 ledger contract, and the
+regression, the scenario-grid smoke, the schema-3 ledger contract, and the
 client-state layer's determinism regression (same seed => byte-identical
 straggler-cell ledger JSON in all three driver modes)."""
 
@@ -230,7 +230,7 @@ def test_scenario_registry_lookup():
 
 
 def test_ledger_artifact_and_schema(small_ds, tmp_path):
-    """The driver writes a schema-1 JSON artifact that validates, and
+    """The driver writes a schema-3 JSON artifact that validates, and
     validate_ledger rejects the failure shapes it exists to catch."""
     init, loss, _ = _model(small_ds)
     fl = FLConfig(n_clients=8, expected_clients=3, local_steps=1, lr_local=0.1)
@@ -277,6 +277,7 @@ def _strip_timing(doc, mode_identity=False):
     doc = json.loads(json.dumps(doc))
     doc.pop("wall_s", None)
     doc.pop("rounds_per_sec", None)
+    doc.get("metrics", {}).pop("wall_ms", None)  # per-round wall clock (schema 3)
     if mode_identity:
         doc.pop("mode", None)
         for k in ("pool_bytes", "rounds_per_scan"):

@@ -50,7 +50,10 @@ ROUND_ENGINE_COMBO_KEYS = {
 # engines, and the pallas combos compress inside the aggregate tile stream.
 ROUND_ENGINE_WORKLOAD_FLAGS = ("mask_parity", "fused_compression")
 
-SIM_SCHEMA = 3
+SIM_SCHEMA = 4
+# the per-round ledger schema every run in the artifact was validated
+# against (repro.sim.driver.SIM_SCHEMA; 3 added wall_ms + the gap series)
+SIM_LEDGER_SCHEMA = 3
 SIM_MODE_KEYS = {"mode", "rounds_per_sec", "us_per_round", "wall_s",
                  "sent_total"}
 SIM_MODES = ("host", "prefetch", "scan", "host+shard", "prefetch+shard",
@@ -124,6 +127,9 @@ def check_sim(fresh: dict, baseline: dict) -> list[str]:
     for name, art in (("fresh", fresh), ("baseline", baseline)):
         if art.get("schema") != SIM_SCHEMA:
             errs.append(f"{name}: schema {art.get('schema')!r}, want {SIM_SCHEMA}")
+        if art.get("ledger_schema") != SIM_LEDGER_SCHEMA:
+            errs.append(f"{name}: ledger_schema {art.get('ledger_schema')!r}, "
+                        f"want {SIM_LEDGER_SCHEMA}")
         modes = art.get("modes", {})
         for mode in SIM_MODES:
             if mode not in modes:

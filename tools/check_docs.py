@@ -88,7 +88,22 @@ DOCSTRING_CONTRACT = [
     ("src/repro/sim/scenarios.py", None, ["Sec. 4", "experiment grid"]),
     ("src/repro/sim/driver.py", None, ["ledger", "schema", "uplink and downlink"]),
     ("src/repro/sim/driver.py", "run_simulation", ["bitwise", "mask"]),
-    ("src/repro/sim/driver.py", "validate_ledger", ["schema-2", "deadline_misses"]),
+    ("src/repro/sim/driver.py", "validate_ledger", ["schema-3", "deadline_misses",
+                                                    "wall_ms", "gap"]),
+    # the obs layer: every module documents its honesty mechanism — the
+    # monotonic clock + block_until_ready for spans, the shared backend
+    # code path for the gap estimator, the observer effect for phased mode
+    ("src/repro/obs/__init__.py", None, ["Eq. 2 gap", "bit-for-bit"]),
+    ("src/repro/obs/trace.py", None, ["perf_counter", "TraceAnnotation",
+                                      "block_until_ready"]),
+    ("src/repro/obs/gap.py", None, ["Eq. 2", "SAME backend code path",
+                                    "diag_every"]),
+    ("src/repro/obs/phased.py", None, ["jits", "block_until_ready"]),
+    ("src/repro/obs/events.py", None, ["JSONL", "schema"]),
+    ("src/repro/obs/http.py", None, ["Prometheus", "stdlib"]),
+    ("src/repro/obs/telemetry.py", None, ["ObsConfig", "Telemetry",
+                                          "Ownership"]),
+    ("src/repro/fl/engine.py", "VmapPhases", ["phase"]),
 ]
 
 # modules whose every public top-level def/class must carry a docstring
@@ -107,6 +122,13 @@ FULL_COVERAGE_MODULES = [
     "src/repro/sim/pool.py",
     "src/repro/sim/scenarios.py",
     "src/repro/sim/driver.py",
+    "src/repro/obs/trace.py",
+    "src/repro/obs/gap.py",
+    "src/repro/obs/events.py",
+    "src/repro/obs/http.py",
+    "src/repro/obs/log.py",
+    "src/repro/obs/phased.py",
+    "src/repro/obs/telemetry.py",
 ]
 
 ARCHITECTURE_MUSTS = [
@@ -136,6 +158,10 @@ ARCHITECTURE_MUSTS = [
     # (threshold's adaptive budget, cyclic's index schedule)
     "Sampler zoo", "SamplerState", "STATEFUL_SAMPLERS", "adaptive budget",
     "test_sampler_contract",
+    # the observability layer: the section, the zero-interference guarantee,
+    # the observer effect, and the mesh limit of the gap estimator
+    "## Observability", "docs/observability.md", "observer effect",
+    "diag_every", "obs gap estimator × mesh", "byte-identical",
 ]
 # docs/paper_map.md must keep the Sec. 4 experiment-grid rows that bind the
 # paper's evaluation setup to the sim subsystem, plus the mesh-path rows.
@@ -149,6 +175,10 @@ PAPER_MAP_MUSTS = [
     # the sampler-zoo rows: each baseline bound to its source paper
     "2105.05883", "2302.03662", "2007.15197", "clustered_probabilities",
     "cyclic_probabilities", "threshold_probabilities",
+    # the observed Eq. 2 gap row: the online estimator bound to its module,
+    # the engine diag step, and the full-participation zero invariant
+    "Eq. 2 — realized sampling gap", "src/repro/obs/gap.py",
+    "make_step(diag=True)", "exactly 0 at full participation",
 ]
 # docs/benchmarks.md: the run recipe, the schema-4 field contract, and the
 # default-gating policy — enforced so the CI docs job catches drift between
@@ -164,8 +194,23 @@ BENCHMARKS_MUSTS = [
     # sampler-frontier artifact schema 1: the cross-sampler bits frontier
     "bench_sampler_frontier", "sampler_frontier.json", "total_uplink_bits",
     "loss-vs-cumulative-uplink-bits",
+    # sim artifact schema 4: the ledger-schema marker (schema-3 ledgers:
+    # wall_ms + the sparse obs gap series)
+    "ledger_schema", "wall_ms",
 ]
-README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md"]
+README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md",
+                "docs/observability.md"]
+# docs/observability.md: the span honesty mechanism, the gap estimator's
+# semantics (what the reference is, where it is exact), the export contract
+# and the endpoint keys the CI obs-smoke job scrapes.
+OBSERVABILITY_MUSTS = [
+    "perf_counter", "TraceAnnotation", "block_until_ready",
+    "observer effect", "phased executor", "diag_every",
+    "full participation", "exactly 0.0", "Not supported on a mesh",
+    "OBS_SCHEMA", "repro_gap_ratio", "repro_phase_seconds",
+    "repro_rounds_total", "/metrics", "obs-smoke", "byte-identical",
+    "wall_ms", "REPRO_LOG",
+]
 
 
 def fail(errors: list, msg: str) -> None:
@@ -272,6 +317,14 @@ def check_static_docs(errors: list) -> None:
         for must in BENCHMARKS_MUSTS:
             if must not in btext:
                 fail(errors, f"docs/benchmarks.md no longer documents {must!r}")
+    obs = ROOT / "docs" / "observability.md"
+    if not obs.exists():
+        fail(errors, "docs/observability.md is missing")
+    else:
+        otext = obs.read_text()
+        for must in OBSERVABILITY_MUSTS:
+            if must not in otext:
+                fail(errors, f"docs/observability.md no longer documents {must!r}")
     readme = (ROOT / "README.md").read_text()
     for must in README_MUSTS:
         if must not in readme:
