@@ -1,1 +1,15 @@
-from repro.checkpoint.ckpt import restore, save  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    available_steps,
+    latest_step,
+    read_meta,
+    restore,
+    restore_subtree,
+    save,
+)
+from repro.checkpoint.resume import (  # noqa: F401
+    CheckpointConfig,
+    RoundCheckpoint,
+    load_round,
+    run_config_doc,
+    save_round,
+)

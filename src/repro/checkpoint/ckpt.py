@@ -1,15 +1,47 @@
-"""Checkpointing: params/opt-state pytrees -> .npz + JSON treedef index.
+"""Checkpointing: pytrees -> versioned ``step-XXXXXXXX/{leaves.npz,index.json}``.
 
 Leaves are saved flattened with their tree paths as keys, so any pure-dict
-pytree round-trips exactly (shapes, dtypes, nesting)."""
+pytree round-trips exactly (shapes, dtypes, nesting).  Two contracts every
+caller (the sim driver's resume subsystem, ``launch/train.py``,
+``launch/serve.py``) relies on:
+
+* **Atomicity** — :func:`save` stages the whole payload into a hidden temp
+  directory next to the final name and publishes it with one
+  ``os.replace``.  A crash at ANY point mid-save leaves either the previous
+  complete checkpoint set untouched or an orphaned ``.tmp-*`` directory
+  that :func:`restore` never looks at — never a torn ``leaves.npz`` beside
+  a stale ``index.json`` (the failure mode of the pre-atomic layout).
+* **Validation** — :func:`restore` raises ``ValueError`` naming the
+  offending tree key on any structure, dtype, or shape mismatch between
+  the checkpoint and the caller's template tree.  Nothing is silently
+  ``.astype``-coerced and nothing hides behind a bare ``assert`` (both
+  were bugs: the assert vanished under ``python -O`` and the coercion let
+  an f16 checkpoint masquerade as f32 params).
+
+Layout: ``save(root, tree, step=k)`` writes ``root/step-%08d/``; multiple
+steps coexist (``keep`` prunes the oldest) and ``restore(root, ...)``
+picks the **latest complete** step — an incomplete or corrupt candidate is
+skipped, falling back to the newest older step.  The pre-PR flat layout
+(``index.json`` directly under ``root``) still restores, and passing a
+specific ``step-XXXXXXXX`` directory as ``path`` pins the step explicitly.
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import re
+import shutil
 
 import jax
 import numpy as np
+
+# index.json schema: version 1 adds dtypes/shapes (restore-time validation)
+# and the free-form `meta` block the resume subsystem rides on.  The pre-PR
+# flat layout (no `schema` field) is still readable.
+CKPT_SCHEMA = 1
+
+_STEP_RE = re.compile(r"^step-(\d{8})$")
 
 
 def _flatten(tree):
@@ -18,25 +50,234 @@ def _flatten(tree):
     return keys, [leaf for _, leaf in flat], treedef
 
 
-def save(path: str, tree, step: int = 0):
+def _step_dirname(step: int) -> str:
+    return f"step-{int(step):08d}"
+
+
+def _read_index(d: str) -> dict:
+    with open(os.path.join(d, "index.json")) as f:
+        return json.load(f)
+
+
+def _is_complete(d: str) -> bool:
+    """True iff ``d`` holds a loadable (index, npz) pair with every leaf."""
+    try:
+        idx = _read_index(d)
+        with np.load(os.path.join(d, "leaves.npz")) as data:
+            names = set(data.files)
+        return all(f"a{i}" in names for i in range(len(idx["keys"])))
+    except Exception:
+        return False
+
+
+def available_steps(path: str) -> list:
+    """Sorted step numbers with a complete checkpoint under root ``path``.
+
+    Incomplete directories — a crashed save's ``.tmp-*`` staging dir, or a
+    ``step-*`` dir whose payload does not load — are excluded, which is what
+    lets :func:`restore` fall back to the newest *complete* checkpoint.
+    """
+    try:
+        names = os.listdir(path)
+    except FileNotFoundError:
+        return []
+    steps = []
+    for name in names:
+        m = _STEP_RE.match(name)
+        if m and _is_complete(os.path.join(path, name)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(path: str):
+    """The newest complete step under root ``path`` (None when there is none)."""
+    steps = available_steps(path)
+    return steps[-1] if steps else None
+
+
+def resolve_dir(path: str, step=None) -> str:
+    """Resolve ``path`` to the single checkpoint directory to read.
+
+    ``path`` may be a checkpoint root (pick ``step``, or the latest complete
+    step), an explicit ``step-XXXXXXXX`` directory, or a pre-PR flat-layout
+    directory (``index.json`` directly inside).  Raises ``FileNotFoundError``
+    when no complete checkpoint exists.
+    """
+    if os.path.isfile(os.path.join(path, "index.json")):
+        return path  # explicit step dir, or the legacy flat layout
+    if step is not None:
+        d = os.path.join(path, _step_dirname(step))
+        if not _is_complete(d):
+            raise FileNotFoundError(
+                f"no complete checkpoint for step {step} under {path!r} "
+                f"(available: {available_steps(path)})"
+            )
+        return d
+    s = latest_step(path)
+    if s is None:
+        raise FileNotFoundError(f"no complete checkpoint under {path!r}")
+    return os.path.join(path, _step_dirname(s))
+
+
+def save(path: str, tree, step: int = 0, meta=None, keep: int = 0) -> str:
+    """Atomically write ``tree`` at ``step`` under root ``path``.
+
+    The payload (``leaves.npz`` + ``index.json``, fsynced) is staged into
+    ``path/.tmp-step-...-<pid>`` and published with a single ``os.replace``
+    to ``path/step-XXXXXXXX`` — the checkpoint either exists completely or
+    not at all.  ``meta`` (a JSON-serialisable dict) rides in the index;
+    ``keep > 0`` prunes all but the newest ``keep`` complete steps after a
+    successful publish.  Returns the final step directory.
+    """
     os.makedirs(path, exist_ok=True)
     keys, leaves, _ = _flatten(tree)
-    arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(leaves)}
-    np.savez(os.path.join(path, "leaves.npz"), **arrays)
-    with open(os.path.join(path, "index.json"), "w") as f:
-        json.dump({"step": step, "keys": keys}, f)
+    arrays = [np.asarray(v) for v in leaves]
+    final = os.path.join(path, _step_dirname(step))
+    tmp = os.path.join(path, f".tmp-{_step_dirname(step)}-{os.getpid()}")
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "leaves.npz"), **{f"a{i}": a for i, a in enumerate(arrays)})
+    index = {
+        "schema": CKPT_SCHEMA,
+        "step": int(step),
+        "keys": keys,
+        "dtypes": [str(a.dtype) for a in arrays],
+        "shapes": [list(a.shape) for a in arrays],
+        "meta": {} if meta is None else meta,
+    }
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.isdir(final):
+        shutil.rmtree(final)  # re-save of the same step
+    os.replace(tmp, final)
+    # make the publish rename durable before pruning anything older
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    if keep and keep > 0:
+        for s in available_steps(path)[:-keep]:
+            shutil.rmtree(os.path.join(path, _step_dirname(s)), ignore_errors=True)
+    return final
 
 
-def restore(path: str, like_tree):
-    with open(os.path.join(path, "index.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(path, "leaves.npz"))
-    keys, leaves, _ = _flatten(like_tree)
-    assert keys == meta["keys"], "checkpoint/tree structure mismatch"
-    new_leaves = [
-        data[f"a{i}"].astype(np.asarray(l).dtype) for i, l in enumerate(leaves)
-    ]
-    tree = jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(like_tree), new_leaves
-    )
-    return tree, meta["step"]
+def read_meta(path: str, step=None) -> tuple:
+    """Return ``(meta, step)`` of the checkpoint ``path`` resolves to.
+
+    Reads only ``index.json`` — no array payload — so callers (the resume
+    subsystem's fingerprint gate) can validate a checkpoint before building
+    the restore template.
+    """
+    idx = _read_index(resolve_dir(path, step))
+    return idx.get("meta", {}), int(idx.get("step", 0))
+
+
+def _validated_leaves(idx: dict, data, keys, leaves, where: str):
+    """Match checkpoint arrays against template leaves; ValueError on breach."""
+    saved_keys = idx["keys"]
+    if len(saved_keys) != len(keys) or saved_keys != keys:
+        bad = next(
+            (f"checkpoint has {a!r}, template wants {b!r}"
+             for a, b in zip(saved_keys, keys) if a != b),
+            f"checkpoint has {len(saved_keys)} leaves, template wants {len(keys)}",
+        )
+        raise ValueError(
+            f"checkpoint/tree structure mismatch in {where}: {bad} "
+            f"(first divergence of {len(saved_keys)} vs {len(keys)} keys)"
+        )
+    out = []
+    for i, (key, like) in enumerate(zip(keys, leaves)):
+        arr = data[f"a{i}"]
+        want = np.asarray(like)
+        if arr.dtype != want.dtype:
+            raise ValueError(
+                f"checkpoint dtype mismatch at key {key!r} in {where}: "
+                f"saved {arr.dtype}, template wants {want.dtype} "
+                f"(refusing to coerce — a silent .astype loses bits)"
+            )
+        if arr.shape != want.shape:
+            raise ValueError(
+                f"checkpoint shape mismatch at key {key!r} in {where}: "
+                f"saved {arr.shape}, template wants {want.shape}"
+            )
+        out.append(arr)
+    return out
+
+
+def restore(path: str, like_tree, step=None) -> tuple:
+    """Restore the newest complete checkpoint under ``path``; returns
+    ``(tree, step)``.
+
+    ``like_tree`` is the structural template: restore validates the saved
+    key set, every leaf dtype and every leaf shape against it and raises
+    ``ValueError`` naming the offending key on any mismatch — never a bare
+    ``assert`` (optimised-out under ``python -O``) and never a silent dtype
+    coercion.  ``step`` pins a specific step; ``path`` may also point at a
+    ``step-XXXXXXXX`` directory (or a pre-PR flat checkpoint) directly.
+    """
+    d = resolve_dir(path, step)
+    idx = _read_index(d)
+    keys, leaves, treedef = _flatten(like_tree)
+    with np.load(os.path.join(d, "leaves.npz")) as data:
+        new_leaves = _validated_leaves(idx, data, keys, leaves, d)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), int(idx["step"])
+
+
+def restore_subtree(path: str, like_tree, prefix: str, step=None) -> tuple:
+    """Restore only the leaves under ``prefix`` (e.g. ``"['params']"``).
+
+    Lets the serving path pull just the model parameters out of a
+    full-fidelity round checkpoint without knowing the optimizer/client
+    state structure.  Validation matches :func:`restore`: the prefixed key
+    set, dtypes and shapes must all match ``like_tree`` or ``ValueError``
+    names the offending key.  Returns ``(tree, step)``.
+    """
+    d = resolve_dir(path, step)
+    idx = _read_index(d)
+    keys, leaves, treedef = _flatten(like_tree)
+    sub = {
+        k[len(prefix):]: i
+        for i, k in enumerate(idx["keys"])
+        if k.startswith(prefix)
+    }
+    if not sub:
+        raise ValueError(
+            f"checkpoint {d} has no leaves under prefix {prefix!r} "
+            f"(keys: {idx['keys'][:4]}...)"
+        )
+    sub_idx = {
+        "keys": list(sub.keys()),
+        "dtypes": [idx["dtypes"][i] for i in sub.values()],
+        "shapes": [idx["shapes"][i] for i in sub.values()],
+    }
+    # reorder to the template's key order before validating, so a match is
+    # judged on content rather than on the saved enumeration order
+    order = {k: i for i, k in enumerate(sub_idx["keys"])}
+    missing = [k for k in keys if k not in order]
+    if missing:
+        raise ValueError(
+            f"checkpoint/tree structure mismatch in {d}: template key "
+            f"{missing[0]!r} not under prefix {prefix!r}"
+        )
+    with np.load(os.path.join(d, "leaves.npz")) as data:
+        new_leaves = []
+        for key, like in zip(keys, leaves):
+            i = sub[key]
+            arr = data[f"a{i}"]
+            want = np.asarray(like)
+            if arr.dtype != want.dtype:
+                raise ValueError(
+                    f"checkpoint dtype mismatch at key {prefix}{key} in {d}: "
+                    f"saved {arr.dtype}, template wants {want.dtype}"
+                )
+            if arr.shape != want.shape:
+                raise ValueError(
+                    f"checkpoint shape mismatch at key {prefix}{key} in {d}: "
+                    f"saved {arr.shape}, template wants {want.shape}"
+                )
+            new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), int(idx["step"])

@@ -57,6 +57,8 @@ def run_training(
     mode: str = "prefetch",
     rounds_per_scan: int = 8,
     obs=None,
+    checkpoint=None,
+    resume=None,
 ):
     """Train for ``rounds`` communication rounds; returns (params, History).
 
@@ -72,6 +74,11 @@ def run_training(
     :class:`~repro.obs.ObsConfig`/:class:`~repro.obs.Telemetry` into the
     driver's observability layer (phase spans, Eq. 2 gap estimator, metrics
     endpoint — docs/observability.md); None keeps telemetry off.
+    ``checkpoint``/``resume`` thread the driver's full-fidelity
+    round-checkpoint layer (a :class:`~repro.checkpoint.CheckpointConfig`
+    or directory path, and a checkpoint path to restore — the resumed run
+    finishes bitwise-identical to an uninterrupted one;
+    docs/architecture.md#checkpoint--resume).
     """
     from repro.sim.driver import run_simulation
 
@@ -80,6 +87,7 @@ def run_training(
         batch_size=batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
         eval_fn=eval_fn, eval_batch=eval_batch, eval_every=eval_every,
         seed=seed, local_epoch=local_epoch, server_opt=server_opt, obs=obs,
+        checkpoint=checkpoint, resume=resume,
     )
     hist = History(
         loss=list(ledger.loss),

@@ -8,6 +8,13 @@ same ``[serve] message`` shape they always had, now filterable via the
 so a ``--metrics-port`` endpoint exports ``repro_phase_seconds`` for both
 stages while decode is live.
 
+``--restore PATH`` serves trained parameters from a checkpoint instead of a
+random init: a training-loop ``--checkpoint`` (or a sim driver
+``RoundCheckpoint``) is recognised by its leaf keys and only the
+``['params']`` subtree is loaded — dtype/shape validated, never coerced
+(docs/architecture.md#checkpoint--resume); a legacy params-only checkpoint
+loads whole.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b-reduced \\
       --batch 4 --prompt-len 32 --gen 16 --metrics-port 0
 """
@@ -21,11 +28,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import restore, restore_subtree
+from repro.checkpoint.ckpt import _read_index, resolve_dir
 from repro.configs import get
 from repro.models import build_model
 from repro.obs import MetricsServer, get_logger, span
 
 log = get_logger("serve")
+
+
+def load_params(path: str, like_params):
+    """Model params out of any checkpoint flavour under ``path``.
+
+    Full-state checkpoints (the sim driver's ``RoundCheckpoint``, the
+    training loop's ``--checkpoint``) store params under the ``['params']``
+    subtree next to optimizer/client state — detected from the saved keys
+    and loaded via :func:`repro.checkpoint.restore_subtree`; a params-only
+    checkpoint restores whole.  Either way dtypes/shapes are validated
+    against the freshly-initialised template (``ValueError`` naming the
+    offending key), never silently coerced.  Returns ``(params, step)``.
+    """
+    idx = _read_index(resolve_dir(path))
+    if any(k.startswith("['params']") for k in idx["keys"]):
+        return restore_subtree(path, like_params, "['params']")
+    return restore(path, like_params)
 
 
 def main():
@@ -34,6 +60,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--restore", default=None, metavar="PATH",
+                    help="serve params restored from this checkpoint (root "
+                         "or step-XXXXXXXX dir; full-state and params-only "
+                         "layouts both work) instead of a random init")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve a live JSON/Prometheus metrics endpoint on "
                          "this port (0 = ephemeral; repro/obs/http.py)")
@@ -61,6 +91,9 @@ def main():
     model = build_model(cfg, remat=False)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
+    if args.restore:
+        params, step = load_params(args.restore, params)
+        log.info("restored params from %s (round %d)", args.restore, step)
     rng = np.random.default_rng(0)
     b, s = args.batch, args.prompt_len
     cache_len = s + args.gen

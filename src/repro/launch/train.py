@@ -40,6 +40,18 @@ only), a schema-versioned JSONL event stream, and a
 ``jax.profiler.start_trace`` window over the first ``--trace-rounds``
 rounds for TensorBoard/Perfetto.
 
+``--checkpoint DIR`` / ``--ckpt-every N`` / ``--resume PATH`` checkpoint
+and resume on either branch (docs/architecture.md#checkpoint--resume).
+With ``--scenario`` they thread the sim driver's full-fidelity
+``RoundCheckpoint`` layer: a resumed run finishes with bitwise-identical
+params and a byte-identical ledger (minus wall-clock) vs the uninterrupted
+one.  On the arch branch the checkpoint carries the FULL training state —
+params, the ``--server-opt`` state, the synthetic-batch RNG bit-state, the
+client-state chains and the sampler carry — an earlier version saved
+params only, so a "restored" momentum/Adam run silently diverged from its
+own continuation.  Both branches refuse a checkpoint whose config
+fingerprint differs from the invocation's flags.
+
 Examples (CPU container — reduced configs):
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-reduced \\
       --rounds 20 --clients 8 --expected 2 --sampler aocs
@@ -54,6 +66,7 @@ Examples (CPU container — reduced configs):
 from __future__ import annotations
 
 import argparse
+import copy
 import dataclasses
 import os
 import time
@@ -62,7 +75,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save
+from repro.checkpoint import (
+    CheckpointConfig,
+    read_meta,
+    restore,
+    save,
+)
+from repro.checkpoint.resume import config_diff, fingerprint
 from repro.configs import get
 from repro.configs.base import FLConfig
 from repro.fl.engine import make_engine
@@ -209,11 +228,17 @@ def run_scenario_cli(args):
             "single-device only (docs/architecture.md#limits) — drop "
             "--diag-every or pass --shard off"
         )
+    ckpt_cfg = None
+    if args.checkpoint:
+        ckpt_cfg = CheckpointConfig(args.checkpoint, every=args.ckpt_every)
     _, ledger = run_scenario(
         sc, reduced=args.reduced, mode=mode, rounds=args.rounds,
         rounds_per_scan=max(args.sim_rounds_per_scan, 1), mesh=mesh,
-        artifact=artifact, obs=obs,
+        artifact=artifact, obs=obs, checkpoint=ckpt_cfg, resume=args.resume,
     )
+    if ckpt_cfg is not None:
+        print(f"[sim] round checkpoints under {ckpt_cfg.dir} "
+              f"(every {ckpt_cfg.every})")
     for k, (loss, sent) in enumerate(zip(ledger.loss, ledger.sent)):
         sys_col = ""
         if effective.system is not None:
@@ -233,7 +258,7 @@ def run_scenario_cli(args):
           f"artifact {artifact}")
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
                     help="assigned architecture to train (omit with --scenario)")
@@ -291,7 +316,26 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr-local", type=float, default=0.05)
-    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--server-opt", default="none",
+                    choices=["none", "momentum", "adam"],
+                    help="server-side optimizer applied to the aggregated "
+                         "update (arch branch; its state rides in "
+                         "--checkpoint, so a resumed run continues the same "
+                         "trajectory)")
+    ap.add_argument("--lr-server", type=float, default=1.0,
+                    help="server optimizer learning rate (--server-opt)")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="write full-state checkpoints under DIR every "
+                         "--ckpt-every rounds (atomic step-XXXXXXXX dirs; "
+                         "params + server-opt state + RNG bit-state + "
+                         "client/sampler state)")
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="rounds between --checkpoint writes")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="resume from a checkpoint root (latest complete "
+                         "step) or a specific step-XXXXXXXX directory; "
+                         "rejected if its config fingerprint differs from "
+                         "this invocation's flags")
     ap.add_argument("--shard", default="auto", choices=["auto", "on", "off"],
                     help="shard clients over a 1-D data mesh (auto: when >1 "
                          "device and clients divide the device count)")
@@ -304,7 +348,7 @@ def main():
                          "update matrices are kept so the post-plan aggregate "
                          "needs no recompute (0 = two-pass recompute; "
                          ">= clients/scan-group = single-pass)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.scenario:
         return run_scenario_cli(args)
@@ -316,6 +360,15 @@ def main():
     cfg = get(args.arch)
     model = build_model(cfg, remat=False)
     system, over = parse_stragglers(args.stragglers, args.deadline)
+    server_opt = None
+    if args.server_opt == "momentum":
+        from repro.optim import sgd
+
+        server_opt = sgd(args.lr_server, momentum=0.9)
+    elif args.server_opt == "adam":
+        from repro.optim import adam
+
+        server_opt = adam(args.lr_server)
     fl = FLConfig(
         n_clients=args.clients, expected_clients=args.expected,
         sampler=args.sampler or "aocs",
@@ -327,6 +380,7 @@ def main():
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     dim = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    opt_state = server_opt.init(params) if server_opt is not None else ()
     state = state_step = None
     if system is not None:
         # arch path: every round's cohort IS the full client set, so the
@@ -382,7 +436,7 @@ def main():
     if mesh is None:
         from repro.fl.engine import RoundEngine
 
-        eng = RoundEngine(model.loss, fl)
+        eng = RoundEngine(model.loss, fl, server_opt)
         if tel is not None and tel.cfg.phases and eng.memory == "vmap":
             from repro.obs.phased import make_phased_step
 
@@ -392,6 +446,12 @@ def main():
             if diag_on:
                 step_diag = jax.jit(eng.make_step(True))
     else:
+        if server_opt is not None:
+            raise SystemExit(
+                "--server-opt and a mesh conflict: the shard_map round has "
+                "no server-optimizer stage (docs/architecture.md#limits) — "
+                "drop --server-opt or pass --shard off"
+            )
         step = jax.jit(make_engine(model.loss, fl, mesh=mesh))
     w = client_weights(fl)
     rng = np.random.default_rng(0)
@@ -401,11 +461,73 @@ def main():
     from repro.core.sampling import init_sampler_state, is_stateful
 
     samp = init_sampler_state() if is_stateful(fl.sampler) else None
+
+    # full-state checkpoint/resume: the arch trajectory is defined by
+    # (params, server-opt state, the synthetic-batch RNG stream, the
+    # client-state chains, the sampler carry) — ALL of it rides in the
+    # checkpoint, fingerprinted over the flags that shape the run.  An
+    # earlier version saved params only, so a restored momentum/Adam run
+    # silently diverged from its own continuation.
+    ckpt_doc = {
+        "arch": cfg.name,
+        "fl": dataclasses.asdict(fl),
+        "system": None if system is None else dataclasses.asdict(system),
+        "batch": args.batch, "seq": args.seq,
+        "server_opt": args.server_opt, "lr_server": args.lr_server,
+    }
+
+    def arch_tree():
+        return {
+            "params": params, "opt_state": opt_state,
+            "client_state": state if state is not None else (),
+            "sampler_state": samp if samp is not None else (),
+        }
+
+    k0 = 0
+    if args.resume:
+        meta, _ = read_meta(args.resume)
+        if meta.get("arch_fingerprint") != fingerprint(ckpt_doc):
+            diffs = "; ".join(config_diff(meta.get("config", {}), ckpt_doc))
+            raise SystemExit(
+                "--resume: checkpoint/flag fingerprint mismatch — resuming "
+                "would silently change the trajectory. Differing keys: "
+                + (diffs or "<fingerprint only>")
+            )
+        tree, _ = restore(args.resume, arch_tree())
+        params, opt_state = tree["params"], tree["opt_state"]
+        if state is not None:
+            state = tree["client_state"]
+        if samp is not None:
+            samp = tree["sampler_state"]
+        rng.bit_generator.state = meta["rng_state"]
+        total_bits = int(meta["total_bits"])
+        k0 = int(meta["round"])
+        if k0 >= args.rounds:
+            raise SystemExit(
+                f"--resume: checkpoint already covers round {k0} — raise "
+                f"--rounds past it to extend the run"
+            )
+        print(f"[train] resumed at round {k0} from {args.resume}")
+
+    def write_ckpt(k_done):
+        d = save(
+            args.checkpoint, jax.device_get(arch_tree()), step=k_done + 1,
+            meta={
+                "round": k_done + 1,
+                "rng_state": copy.deepcopy(rng.bit_generator.state),
+                "total_bits": int(total_bits),
+                "config": ckpt_doc,
+                "arch_fingerprint": fingerprint(ckpt_doc),
+            },
+            keep=3,
+        )
+        print(f"[train] checkpoint -> {d}")
+
     if tel is not None:
         tel.run_start(arch=cfg.name, mode="train", sampler=fl.sampler,
                       n_clients=fl.n_clients, rounds=args.rounds,
                       backend=jax.default_backend())
-    for k in range(args.rounds):
+    for k in range(k0, args.rounds):
         if tel is not None:
             tel.round_start(k)
         batch = synthetic_token_batch(rng, cfg, fl.n_clients, fl.local_steps,
@@ -419,11 +541,12 @@ def main():
         else:
             trace = None
         if phased_step is not None:
-            params, _, m = phased_step(params, (), batch, w, kk, trace, samp,
-                                       diag=diag)
+            params, opt_state, m = phased_step(
+                params, opt_state, batch, w, kk, trace, samp, diag=diag
+            )
         else:
-            params, _, m = (step_diag if diag else step)(
-                params, (), batch, w, kk, trace, samp
+            params, opt_state, m = (step_diag if diag else step)(
+                params, opt_state, batch, w, kk, trace, samp
             )
         if samp is not None:
             samp = m.sampler_state
@@ -443,12 +566,13 @@ def main():
         print(f"[round {k:3d}] loss {loss:.4f} alpha {float(m.alpha):.3f} "
               f"gamma {float(m.gamma):.3f} sent {int(m.sent_clients)}/{fl.n_clients} "
               f"{sys_col}bits {total_bits/1e9:.2f}G ({wall_s:.1f}s)")
+        if args.checkpoint and (
+            (k + 1) % args.ckpt_every == 0 or k + 1 == args.rounds
+        ):
+            write_ckpt(k)
     if tel is not None:
         tel.finish(rounds=args.rounds)
         tel.close()
-    if args.checkpoint:
-        save(args.checkpoint, params, step=args.rounds)
-        print(f"[train] checkpoint saved to {args.checkpoint}")
 
 
 if __name__ == "__main__":

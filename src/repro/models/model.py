@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import kvcache as KV
 from repro.models import transformer as T
-from repro.models.layers import causal_mask, decode_mask
+from repro.models.layers import causal_mask, decode_mask, sinusoidal_positions
 
 
 def _cast(tree, dtype):
@@ -419,7 +419,7 @@ def _build_encdec(cfg: ModelConfig, remat: bool = True) -> Model:
     def encode(p, frames):
         """frames: (B, enc_seq, d) stub embeddings (conv frontend carve-out)."""
         bsz, es, _ = frames.shape
-        h = frames.astype(dtype) + T.sinusoidal_positions(es, cfg.d_model).astype(dtype)
+        h = frames.astype(dtype) + sinusoidal_positions(es, cfg.d_model).astype(dtype)
         positions = jnp.broadcast_to(jnp.arange(es), (bsz, es))
         mask = jnp.ones((1, 1, es, es), bool)  # bidirectional
 
@@ -446,7 +446,7 @@ def _build_encdec(cfg: ModelConfig, remat: bool = True) -> Model:
     def _dec_inputs(p, tokens):
         h = T.embed_tokens(p["embed"], tokens, cfg)
         seq = h.shape[1]
-        h = h + T.sinusoidal_positions(seq, cfg.d_model).astype(h.dtype)
+        h = h + sinusoidal_positions(seq, cfg.d_model).astype(h.dtype)
         positions = jnp.broadcast_to(jnp.arange(seq), (h.shape[0], seq))
         return h, positions
 
@@ -520,7 +520,7 @@ def _build_encdec(cfg: ModelConfig, remat: bool = True) -> Model:
         bsz = h.shape[0]
         t = cache["kv"]["k"].shape[2]
         h = h + jax.lax.dynamic_slice_in_dim(
-            T.sinusoidal_positions(t, cfg.d_model), pos, 1, axis=0
+            sinusoidal_positions(t, cfg.d_model), pos, 1, axis=0
         ).astype(h.dtype)[None]
         positions = jnp.full((bsz, 1), pos, dtype=jnp.int32)
         mask = decode_mask(t, pos, None)

@@ -69,11 +69,27 @@ the prefetch loop gains a per-round device sync so wall times are honest
 single-device only (rejected with a mesh); ``ObsConfig.phases`` applies to
 host-mode vmap engines and is ignored elsewhere (scan rounds are timed at
 block granularity).
+
+A ``checkpoint`` argument (:class:`repro.checkpoint.CheckpointConfig`, or a
+bare directory path) writes a full-fidelity
+:class:`repro.checkpoint.RoundCheckpoint` after every ``every``-th round —
+params, server-opt state, the pool generator's exact bit-state, the
+``ClientState`` chains, the ``SamplerState`` carry, the round index, the
+ledger tail and a config fingerprint — atomically, from all three modes
+(scan checkpoints at block boundaries; block spans are aligned to the
+checkpoint grid the same way they align to the eval grid).  ``resume=``
+restores one and continues at the saved round: the finished run's params
+are **bitwise identical** and its ledger JSON **byte-identical** (minus the
+wall-clock fields) to the uninterrupted run's, in every mode, with or
+without a stateful sampler / Markov client-state — the parity gate in
+tests/test_resume.py and the ``resume-smoke`` CI job
+(docs/architecture.md#checkpoint--resume).
 """
 
 from __future__ import annotations
 
 import contextlib
+import copy
 import dataclasses
 import json
 import os
@@ -84,6 +100,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.resume import (
+    CheckpointConfig,
+    RoundCheckpoint,
+    load_round,
+    run_config_doc,
+    save_round,
+)
 from repro.core.sampling import init_sampler_state, is_stateful
 from repro.fl.engine import RoundEngine, make_engine
 from repro.fl.round import client_weights, round_bits_duplex
@@ -314,6 +337,8 @@ def run_simulation(
     scenario_name: str | None = None,
     artifact: str | None = None,
     obs=None,
+    checkpoint=None,
+    resume=None,
 ) -> tuple:
     """Run ``rounds`` communication rounds; returns ``(params, SimLedger)``.
 
@@ -335,6 +360,15 @@ def run_simulation(
     on the observability layer — module docstring and docs/observability.md;
     the gap estimator needs a single-device run (``diag_every`` with a
     ``mesh`` is rejected: the shard_map round has no diag variant).
+    ``checkpoint`` (a :class:`~repro.checkpoint.CheckpointConfig` or a bare
+    directory path) writes a full-fidelity
+    :class:`~repro.checkpoint.RoundCheckpoint` after every ``every``-th
+    round and after the last; ``resume`` (a checkpoint root or a specific
+    ``step-XXXXXXXX`` directory) restores one — rejecting it with a
+    ``ValueError`` when its config fingerprint differs from this run's —
+    and continues at the saved round, reproducing the uninterrupted run's
+    params bitwise and its ledger byte-for-byte minus the wall-clock fields
+    (module docstring; docs/architecture.md#checkpoint--resume).
     """
     if mode not in MODES:
         raise ValueError(f"unknown sim mode {mode!r}; want one of {MODES}")
@@ -434,10 +468,118 @@ def run_simulation(
 
     dev_metrics = []          # device-side RoundMetrics (stacked blocks in scan)
     dev_evals = []            # (round, device scalar)
-    wall_ms = []              # per-round wall (monotonic clock; see SimLedger)
+    wall_ms = []              # per-round wall (monotonic clock; THIS process)
     gap_records = []          # (round, gap_sq, full_sq) on the diag_every grid
     tel_up = tel_down = tel_miss = tel_drop = 0   # live endpoint counters
     t_first, first_units = None, 0
+
+    # ---- checkpoint / resume: full-fidelity RoundCheckpoints ----
+    ck = None
+    if checkpoint is not None:
+        ck = (checkpoint if isinstance(checkpoint, CheckpointConfig)
+              else CheckpointConfig(str(checkpoint)))
+    cfg_doc = None
+    if ck is not None or resume is not None:
+        cfg_doc = run_config_doc(
+            fl, seed=seed, batch_size=batch_size, local_epoch=local_epoch,
+            pool_clients=int(dataset.n_clients), model_dim=dim, system=system,
+            eval_every=int(eval_every) if eval_fn is not None else None,
+            scenario=scenario_name,
+        )
+    k0 = 0
+    tail = {name: [] for name in LEDGER_SERIES}
+    tail_masks = tail_norms = None
+    if resume is not None:
+        rc = load_round(
+            resume, params=params, opt_state=opt_state, client_state=state,
+            sampler_state=samp, config=cfg_doc,
+        )
+        if rc.round >= rounds:
+            raise ValueError(
+                f"checkpoint at {resume!r} already covers round {rc.round} "
+                f"but the run asks for rounds={rounds} — raise rounds to "
+                f"extend the run"
+            )
+        k0 = rc.round
+        params, opt_state = rc.params, rc.opt_state
+        if state is not None:
+            state = rc.client_state
+        if samp is not None:
+            samp = rc.sampler_state
+        # continue the pool generator mid-stream: every later cohort draw
+        # and permutation is the one the uninterrupted run would have made
+        rng.bit_generator.state = rc.rng_state
+        tail = rc.series
+        tail_masks = np.asarray(rc.masks, bool)
+        tail_norms = np.asarray(rc.norms, np.float32)
+        gap_records.extend(rc.gap_records)
+        dev_evals.extend(rc.evals)
+
+    def need_ckpt(k):
+        # after round k: on the every-grid, and always after the final round
+        return ck is not None and ((k + 1) % ck.every == 0 or k + 1 == rounds)
+
+    def rows(name):
+        vals = [np.asarray(getattr(m, name)) for m in dev_metrics]
+        return np.concatenate(vals, 0) if mode == "scan" else np.stack(vals, 0)
+
+    def splice_series():
+        """Full-run per-round series plus (done, n) mask/norm arrays.
+
+        The resumed tail's entries (JSON round-trips python floats exactly)
+        are followed by this process's live rounds, converted with the same
+        ``float()``/``int()`` calls either way — so a spliced ledger is
+        byte-identical to the uninterrupted run's, not merely close.
+        """
+        losses, alphas, gammas = rows("loss"), rows("alpha"), rows("gamma")
+        sents, expected = rows("sent_clients"), rows("expected_clients")
+        selected = rows("selected_clients")
+        misses, drops = rows("deadline_misses"), rows("dropouts")
+        masks_l = rows("mask").astype(bool)
+        norms_l = rows("norms").astype(np.float32)
+        ser = {name: list(tail[name]) for name in LEDGER_SERIES}
+        up_total = ser["uplink_bits"][-1] if ser["uplink_bits"] else 0
+        down_total = ser["downlink_bits"][-1] if ser["downlink_bits"] else 0
+        for i in range(masks_l.shape[0]):
+            up, down = round_bits_duplex(fl, dim, masks_l[i])
+            up_total += int(up)
+            down_total += int(down)
+            ser["loss"].append(float(losses[i]))
+            ser["alpha"].append(float(alphas[i]))
+            ser["gamma"].append(float(gammas[i]))
+            ser["sent"].append(int(sents[i]))
+            ser["expected_clients"].append(float(expected[i]))
+            ser["over_selected"].append(int(selected[i]))
+            ser["deadline_misses"].append(int(misses[i]))
+            ser["dropouts"].append(int(drops[i]))
+            ser["uplink_bits"].append(up_total)
+            ser["downlink_bits"].append(down_total)
+            ser["wall_ms"].append(float(wall_ms[i]))
+        if tail_masks is not None:
+            return (ser, np.concatenate([tail_masks, masks_l], 0),
+                    np.concatenate([tail_norms, norms_l], 0))
+        return ser, masks_l, norms_l
+
+    def write_ckpt(k_done, rng_st, cl_state, s_state):
+        # k_done = the last completed round; everything device-side is
+        # pulled to host (device_get) before the next step can donate it
+        ser, m_all, n_all = splice_series()
+        save_round(ck, RoundCheckpoint(
+            round=k_done + 1,
+            params=jax.device_get(params),
+            opt_state=jax.device_get(opt_state),
+            client_state=(jax.device_get(cl_state)
+                          if cl_state is not None else None),
+            sampler_state=(jax.device_get(s_state)
+                           if s_state is not None else None),
+            rng_state=rng_st,
+            series=ser,
+            gap_records=list(gap_records),
+            evals=[(int(k), float(v)) for k, v in dev_evals],
+            masks=m_all,
+            norms=n_all,
+            config=cfg_doc,
+        ))
 
     def tel_round(k, metrics, ms_val):
         # per-round endpoint/event record (telemetry on only).  The mask
@@ -480,7 +622,7 @@ def run_simulation(
                 round_step_diag = jax.jit(
                     step_factory(True), donate_argnums=(0, 1)
                 )
-        for k in range(rounds):
+        for k in range(k0, rounds):
             t_round = time.perf_counter()
             diag = diag_on and tel.want_gap(k)
             if tel is not None:
@@ -524,6 +666,11 @@ def run_simulation(
                 tel_gap(k, metrics.gap)
             if tel is not None:
                 tel_round(k, metrics, wall_ms[-1])
+            if need_ckpt(k):
+                # the host loop draws round k's randomness inside iteration
+                # k, so the live RNG/chain state IS the post-round-k state
+                write_ckpt(k, copy.deepcopy(rng.bit_generator.state),
+                           state, samp)
 
     elif mode == "prefetch":
         cpool = ClientPool(dataset, mesh=mesh, client_axis=fl.client_axis)
@@ -544,15 +691,22 @@ def run_simulation(
                 state, trace = state_step(state, kk, jnp.asarray(plan.clients))
             return plan, cohort_weights(clients), kk, trace
 
-        cur = draw_round(0)
+        cur = draw_round(k0)
         cur_batch = cpool.gather(cur[0])
-        for k in range(rounds):
+        for k in range(k0, rounds):
             t_round = time.perf_counter()
             diag = diag_on and tel.want_gap(k)
             if tel is not None:
                 tel.round_start(k)
             plan, w, kk, trace = cur
             batch = cur_batch
+            snap = None
+            if need_ckpt(k) and k + 1 < rounds:
+                # double buffering advances the host RNG and the client-state
+                # chain through round k+1's draw BEFORE round k's checkpoint
+                # is written — snapshot both now, so the resumed process
+                # replays round k+1's draw itself, bit for bit
+                snap = (copy.deepcopy(rng.bit_generator.state), state)
             if k + 1 < rounds:
                 # double buffering: round k+1's plan is drawn and its gather
                 # dispatched while round k's step is still executing.
@@ -585,6 +739,13 @@ def run_simulation(
                 tel_gap(k, metrics.gap)
             if tel is not None:
                 tel_round(k, metrics, wall_ms[-1])
+            if need_ckpt(k):
+                # SamplerState is read back AFTER the step, so live `samp`
+                # is correct; RNG/chain come from the pre-prefetch snapshot
+                # (on the final round nothing was prefetched — use live)
+                rng_st, cl_st = snap if snap is not None else (
+                    copy.deepcopy(rng.bit_generator.state), state)
+                write_ckpt(k, rng_st, cl_st, samp)
 
     else:  # scan-over-rounds
         cpool = ClientPool(dataset)
@@ -626,12 +787,17 @@ def run_simulation(
             return params, opt_state, st, sp, ms
 
         chunk = jax.jit(chunk_fn, donate_argnums=(1, 2, 3, 4))
-        done = 0
+        done = k0
         while done < rounds:
             t_blk = time.perf_counter()
             if tel is not None:
                 tel.round_start(done)
             span = min(rounds_per_scan, rounds - done)
+            if ck is not None:
+                # land block ends on the checkpoint grid — same alignment
+                # trick as the eval grid below, composed via min, so every
+                # ckpt_every-th round ENDS a block and can be checkpointed
+                span = min(span, ck.every - done % ck.every)
             if eval_fn is not None:
                 # keep the eval_every grid: the next eval round must END a
                 # block (eval happens after round k's step), so block spans
@@ -678,15 +844,18 @@ def run_simulation(
                         tel_gap(kg, row.gap)
                     if tel is not None:
                         tel_round(kg, row, blk_ms)
+            if ck is not None and (done % ck.every == 0 or done == rounds):
+                # the span alignment above guarantees every every-th round
+                # ends a block; all of the block's draws are already made,
+                # so the live RNG state is the post-round-(done-1) state
+                write_ckpt(done - 1, copy.deepcopy(rng.bit_generator.state),
+                           state if use_state else None,
+                           samp if use_samp else None)
 
     jax.block_until_ready(params)
     if dev_metrics:
         jax.block_until_ready(dev_metrics[-1].loss)
     t_end = time.perf_counter()
-
-    def rows(name):
-        vals = [np.asarray(getattr(m, name)) for m in dev_metrics]
-        return np.concatenate(vals, 0) if mode == "scan" else np.stack(vals, 0)
 
     ledger = SimLedger(
         mode=mode,
@@ -712,29 +881,13 @@ def run_simulation(
             ),
         },
     )
-    losses, alphas, gammas = rows("loss"), rows("alpha"), rows("gamma")
-    sents, expected = rows("sent_clients"), rows("expected_clients")
-    selected = rows("selected_clients")
-    misses, drops = rows("deadline_misses"), rows("dropouts")
-    masks, norms = rows("mask"), rows("norms")
-    up_total = down_total = 0
-    for k in range(rounds):
-        up, down = round_bits_duplex(fl, dim, masks[k])
-        up_total += int(up)
-        down_total += int(down)
-        ledger.loss.append(float(losses[k]))
-        ledger.alpha.append(float(alphas[k]))
-        ledger.gamma.append(float(gammas[k]))
-        ledger.sent.append(int(sents[k]))
-        ledger.expected_clients.append(float(expected[k]))
-        ledger.over_selected.append(int(selected[k]))
-        ledger.deadline_misses.append(int(misses[k]))
-        ledger.dropouts.append(int(drops[k]))
-        ledger.uplink_bits.append(up_total)
-        ledger.downlink_bits.append(down_total)
-        ledger.wall_ms.append(float(wall_ms[k]))
-        ledger.masks.append(masks[k].astype(bool))
-        ledger.norms.append(norms[k].astype(np.float32))
+    # the resumed tail (if any) splices ahead of this process's live rounds
+    # with identical scalar conversions — byte-identical artifact either way
+    ser, masks_all, norms_all = splice_series()
+    for name in LEDGER_SERIES:
+        setattr(ledger, name, ser[name])
+    ledger.masks = list(masks_all)
+    ledger.norms = list(norms_all)
     for k, gs, fs in gap_records:
         ledger.gap_rounds.append(int(k))
         ledger.gap_sq.append(gs)
@@ -744,11 +897,12 @@ def run_simulation(
         ledger.acc_rounds.append(int(k))
         ledger.acc.append(float(v))
     ledger.wall_s = t_end - t_start
-    steady = rounds - first_units
+    # throughput counts the rounds THIS process ran, not the resumed tail
+    steady = (rounds - k0) - first_units
     if t_first is not None and steady > 0 and t_end > t_first:
         ledger.rounds_per_sec = steady / (t_end - t_first)
     else:
-        ledger.rounds_per_sec = rounds / max(t_end - t_start, 1e-9)
+        ledger.rounds_per_sec = (rounds - k0) / max(t_end - t_start, 1e-9)
     if tel is not None:
         tel.finish(rounds=rounds, wall_s=ledger.wall_s,
                    rounds_per_sec=ledger.rounds_per_sec)
@@ -770,6 +924,8 @@ def run_scenario(
     mesh=None,
     artifact: str | None = None,
     obs=None,
+    checkpoint=None,
+    resume=None,
 ) -> tuple:
     """Run a registered scenario (by name or instance) end to end.
 
@@ -781,8 +937,11 @@ def run_scenario(
     ``Scenario.system`` cells thread their
     :class:`~repro.sim.pool.SystemConfig` into the client-state layer.
     ``obs`` threads an :class:`~repro.obs.ObsConfig`/
-    :class:`~repro.obs.Telemetry` into the observability layer.
-    Returns ``(params, SimLedger)``.
+    :class:`~repro.obs.Telemetry` into the observability layer;
+    ``checkpoint``/``resume`` thread the full-fidelity round-checkpoint
+    layer (:func:`run_simulation`) — the scenario's own name rides in the
+    config fingerprint, so a checkpoint from one scenario refuses to resume
+    another.  Returns ``(params, SimLedger)``.
     """
     sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
     if reduced:
@@ -802,4 +961,5 @@ def run_scenario(
         batch_size=sc.batch_size, mode=mode, rounds_per_scan=rounds_per_scan,
         seed=sc.seed if seed is None else seed, mesh=mesh, system=sc.system,
         scenario_name=sc.name, artifact=artifact, obs=obs,
+        checkpoint=checkpoint, resume=resume,
     )

@@ -104,6 +104,21 @@ DOCSTRING_CONTRACT = [
     ("src/repro/obs/telemetry.py", None, ["ObsConfig", "Telemetry",
                                           "Ownership"]),
     ("src/repro/fl/engine.py", "VmapPhases", ["phase"]),
+    # the checkpoint/resume layer: the store documents its two contracts
+    # (atomic publish, validated restore), the resume module its complete
+    # state inventory and the fingerprint gate
+    ("src/repro/checkpoint/ckpt.py", None, ["Atomicity", "os.replace",
+                                            "Validation", "latest complete"]),
+    ("src/repro/checkpoint/ckpt.py", "save", ["os.replace", "completely or"]),
+    ("src/repro/checkpoint/ckpt.py", "restore", ["ValueError",
+                                                 "offending key"]),
+    ("src/repro/checkpoint/resume.py", None, ["RoundCheckpoint",
+                                              "bit-generator state",
+                                              "fingerprint",
+                                              "byte-identical"]),
+    ("src/repro/checkpoint/resume.py", "load_round", ["templates",
+                                                      "ValueError"]),
+    ("src/repro/checkpoint/resume.py", "run_config_doc", ["fingerprint"]),
 ]
 
 # modules whose every public top-level def/class must carry a docstring
@@ -129,6 +144,8 @@ FULL_COVERAGE_MODULES = [
     "src/repro/obs/log.py",
     "src/repro/obs/phased.py",
     "src/repro/obs/telemetry.py",
+    "src/repro/checkpoint/ckpt.py",
+    "src/repro/checkpoint/resume.py",
 ]
 
 ARCHITECTURE_MUSTS = [
@@ -162,6 +179,11 @@ ARCHITECTURE_MUSTS = [
     # the observer effect, and the mesh limit of the gap estimator
     "## Observability", "docs/observability.md", "observer effect",
     "diag_every", "obs gap estimator × mesh", "byte-identical",
+    # the checkpoint/resume section: the state inventory, the atomicity
+    # contract, the two mode subtleties and the executable parity gate
+    "Checkpoint & resume", "RoundCheckpoint", "os.replace",
+    "bit-generator state", "latest complete", "step-XXXXXXXX",
+    "check_resume", "resume-smoke", "not a RoundCheckpoint",
 ]
 # docs/paper_map.md must keep the Sec. 4 experiment-grid rows that bind the
 # paper's evaluation setup to the sim subsystem, plus the mesh-path rows.
@@ -197,9 +219,13 @@ BENCHMARKS_MUSTS = [
     # sim artifact schema 4: the ledger-schema marker (schema-3 ledgers:
     # wall_ms + the sparse obs gap series)
     "ledger_schema", "wall_ms",
+    # the resume subsystem's cross-link: why wall-clock is the one field a
+    # resumed run may change, and where the bitwise gate lives
+    "check_resume", "checkpoint--resume",
 ]
 README_MUSTS = ["docs/paper_map.md", "docs/architecture.md", "docs/benchmarks.md",
-                "docs/observability.md"]
+                "docs/observability.md", "check_resume", "resume-smoke",
+                "--resume"]
 # docs/observability.md: the span honesty mechanism, the gap estimator's
 # semantics (what the reference is, where it is exact), the export contract
 # and the endpoint keys the CI obs-smoke job scrapes.

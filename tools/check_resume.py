@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Resume-parity gate: an interrupted-and-resumed run must be
+indistinguishable from a straight-through run.
+
+For each requested driver mode, runs one reduced scenario cell three ways:
+
+1. **straight** — ``rounds`` rounds, no checkpointing (the reference);
+2. **interrupted** — the same cell stopped after ``--interrupt`` rounds,
+   writing full-fidelity round checkpoints every ``--every`` rounds (the
+   final round always checkpoints, emulating a run killed at round k whose
+   latest checkpoint survived);
+3. **resumed** — restored from the interrupted run's checkpoint directory
+   and run to ``rounds``.
+
+PASS requires the resumed run's final params to be **bitwise identical** to
+the straight run's and its ledger JSON **byte-identical** minus the
+wall-clock fields (``wall_s``, ``rounds_per_sec``, ``metrics.wall_ms``) —
+the acceptance gate of the resume subsystem
+(docs/architecture.md#checkpoint--resume).  Exit code 1 on any mismatch.
+
+CI runs this twice (.github/workflows/ci.yml ``resume-smoke``): the default
+cell — threshold sampler (stateful EMA carry) + Markov availability chains —
+across all three modes, and a sharded cell under 4 emulated devices
+exercising restore-under-mesh:
+
+  PYTHONPATH=src python tools/check_resume.py
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
+      python tools/check_resume.py \\
+      --cell femnist1-fedavg-aocs-straggler-shard --modes host,prefetch
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+
+
+def strip_timing(doc: dict) -> dict:
+    """Drop the only fields a resume legitimately changes: wall-clock."""
+    doc = json.loads(json.dumps(doc))
+    doc.pop("wall_s", None)
+    doc.pop("rounds_per_sec", None)
+    doc["metrics"].pop("wall_ms", None)
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="femnist1-fedavg-threshold-straggler",
+                    help="scenario cell (reduced variant is run); the default "
+                         "couples a stateful sampler with Markov availability")
+    ap.add_argument("--modes", default="host,prefetch,scan",
+                    help="comma-separated driver modes to gate")
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="straight-through run length")
+    ap.add_argument("--interrupt", type=int, default=5,
+                    help="round the interrupted run stops after")
+    ap.add_argument("--every", type=int, default=2,
+                    help="checkpoint cadence of the interrupted run")
+    ap.add_argument("--rounds-per-scan", type=int, default=3,
+                    help="scan-mode block length (off the checkpoint grid on "
+                         "purpose, to exercise the block alignment)")
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import CheckpointConfig
+    from repro.sim import run_scenario
+
+    failures = 0
+    for mode in args.modes.split(","):
+        mode = mode.strip()
+        _, led = run_scenario(
+            args.cell, reduced=True, mode=mode, rounds=args.rounds,
+            rounds_per_scan=args.rounds_per_scan,
+        )
+        p_ref = _
+        ref = json.dumps(strip_timing(led.to_json()), sort_keys=True)
+        with tempfile.TemporaryDirectory() as d:
+            run_scenario(
+                args.cell, reduced=True, mode=mode, rounds=args.interrupt,
+                rounds_per_scan=args.rounds_per_scan,
+                checkpoint=CheckpointConfig(d, every=args.every),
+            )
+            p_res, led_res = run_scenario(
+                args.cell, reduced=True, mode=mode, rounds=args.rounds,
+                rounds_per_scan=args.rounds_per_scan, resume=d,
+            )
+        res = json.dumps(strip_timing(led_res.to_json()), sort_keys=True)
+        ledger_ok = res == ref
+        params_ok = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(
+                jax.tree_util.tree_leaves(p_ref),
+                jax.tree_util.tree_leaves(p_res),
+            )
+        )
+        status = "PASS" if ledger_ok and params_ok else "FAIL"
+        print(f"[check_resume] {args.cell} mode={mode} "
+              f"devices={jax.device_count()} "
+              f"ledger={'byte-identical' if ledger_ok else 'MISMATCH'} "
+              f"params={'bitwise' if params_ok else 'MISMATCH'} -> {status}")
+        if not (ledger_ok and params_ok):
+            failures += 1
+    if failures:
+        print(f"[check_resume] {failures} mode(s) FAILED", file=sys.stderr)
+        return 1
+    print(f"[check_resume] all modes pass: interrupted-at-round-"
+          f"{args.interrupt} == straight-through-{args.rounds}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
